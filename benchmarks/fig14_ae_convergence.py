@@ -1,0 +1,120 @@
+"""Paper Fig. 14: convergence of the LGC autoencoders during distributed
+training, with and without the similarity loss (lambda2 = 0 vs 0.5).
+
+Trains the PS autoencoder online on REAL top-k gradient vectors from
+ConvNet5 2-node training.  Reproduction targets: (a) the AE reconstruction
+loss converges within a few hundred iterations; (b) lambda2=0.5 reaches a
+lower reconstruction error than lambda2=0."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row
+from repro.configs.base import CompressionConfig
+from repro.configs.convnet5 import smoke_config
+from repro.core import autoencoder as AE
+from repro.core import build_compressor, sparsify as SP
+from repro.data import synthetic_image_batches
+from repro.models.convnet import convnet5_loss, init_convnet5
+from repro.utils.tree import tree_flatten_vector
+
+K, B, STEPS = 2, 8, 250
+
+
+def collect_topk_stream():
+    """Real per-node top-k gradient vectors during ConvNet5 training."""
+    cfg = smoke_config()
+    params = init_convnet5(jax.random.PRNGKey(0), cfg)
+    cc = CompressionConfig(method="lgc_ps", sparsity=0.05,
+                           innovation_sparsity=0.005)
+    comp = build_compressor(cc, params, K)
+    data = synthetic_image_batches(cfg.num_classes, K * B, cfg.image_size,
+                                   seed=2)
+
+    @jax.jit
+    def node_grads(params, batch):
+        def one(i):
+            sl = lambda x: jax.lax.dynamic_slice_in_dim(x, i * B, B)
+            lb = {"images": sl(batch["images"]),
+                  "labels": sl(batch["labels"])}
+            g = jax.grad(lambda p: convnet5_loss(p, cfg, lb)[0])(params)
+            return tree_flatten_vector(g)
+        return jax.vmap(one)(jnp.arange(K))
+
+    stream = []
+    for step in range(STEPS):
+        batch = next(data)
+        g_nodes = node_grads(params, batch)
+        vals = jax.vmap(lambda g: SP.select_topk(g, comp.layout)[0])(
+            g_nodes)
+        stream.append(np.asarray(vals))
+        mean_g = g_nodes.mean(0)
+        from repro.utils.tree import tree_unflatten_vector
+        params = jax.tree_util.tree_map(
+            lambda p, g: p - 0.05 * g, params,
+            tree_unflatten_vector(mean_g, params))
+    return stream, comp
+
+
+def train_ae(stream, lam_sim: float):
+    ae = AE.init_lgc_autoencoder(jax.random.PRNGKey(7), num_decoders=K,
+                                 ps_innovation=True)
+    mom = jax.tree_util.tree_map(jnp.zeros_like, ae)
+
+    @jax.jit
+    def step(ae, mom, g_nodes, it):
+        inno = jax.vmap(lambda v: SP.select_innovation(v, 0.1)[0])(g_nodes)
+        def loss_fn(a):
+            l, parts = AE.ae_loss_ps(a, g_nodes, inno, it % K, 1.0,
+                                     lam_sim)
+            return l, parts
+        (l, parts), grads = jax.value_and_grad(loss_fn, has_aux=True)(ae)
+        gn = jnp.sqrt(sum(jnp.sum(x * x)
+                          for x in jax.tree_util.tree_leaves(grads)))
+        scale = jnp.minimum(1.0, 1.0 / jnp.maximum(gn, 1e-12))
+        grads = jax.tree_util.tree_map(lambda x: x * scale, grads)
+        mom = jax.tree_util.tree_map(lambda m, g: 0.9 * m + g, mom, grads)
+        ae = jax.tree_util.tree_map(lambda p, m: p - 3e-3 * m, ae, mom)
+        return ae, mom, parts["l_rec"]
+
+    # RELATIVE reconstruction error (||rec-g||/||g||): raw MSE drifts with
+    # the gradient magnitude as the primary model trains, so it cannot
+    # show AE convergence (lesson recorded in tests/test_compressors.py)
+    @jax.jit
+    def rel_err(ae, g_nodes, it):
+        inno = jax.vmap(lambda v: SP.select_innovation(v, 0.1)[0])(g_nodes)
+        z = AE.lgc_encode(ae, g_nodes)
+        recs = AE.lgc_decode_ps(ae, z[it % K], inno)
+        return (jnp.linalg.norm(recs - g_nodes)
+                / jnp.maximum(jnp.linalg.norm(g_nodes), 1e-12))
+
+    errs = []
+    for it, g in enumerate(stream):
+        g = jnp.asarray(g)
+        errs.append(float(rel_err(ae, g, it)))
+        ae, mom, _ = step(ae, mom, g, it)
+    return errs
+
+
+def main():
+    t0 = time.perf_counter()
+    stream, comp = collect_topk_stream()
+    us_collect = (time.perf_counter() - t0) * 1e6
+    row("fig14/collect_gradient_stream", us_collect,
+        f"steps={STEPS} mu_pad={comp.layout.mu_pad}")
+    for lam in (0.0, 0.5):
+        t0 = time.perf_counter()
+        errs = train_ae(stream, lam)
+        us = (time.perf_counter() - t0) * 1e6
+        first, last = np.mean(errs[:25]), np.mean(errs[-25:])
+        row(f"fig14/lambda_sim_{lam}", us,
+            f"rel_err_first={first:.3f} rel_err_last={last:.3f} "
+            f"converged={'yes' if last < first else 'no'}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""Pallas kernel micro-benchmarks (interpret mode on CPU; structural —
+real perf numbers require a TPU).  Derived column reports agreement with
+the jnp oracle so the CSV doubles as a correctness gate."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row, time_call
+from repro.kernels import ops, ref
+from repro.kernels.sparsify_ef import TILE
+
+
+def main():
+    n = 2 * TILE
+    g = jax.random.normal(jax.random.PRNGKey(0), (n,))
+    u = jax.random.normal(jax.random.PRNGKey(1), (n,)) * 0.1
+    v = jax.random.normal(jax.random.PRNGKey(2), (n,)) * 0.2
+    us = time_call(lambda: ops.sparsify_ef(g, u, v, 0.5, 0.9))
+    k_out = ops.sparsify_ef(g, u, v, 0.5, 0.9)
+    r_out = ref.sparsify_ef_ref(g, u, v, 0.5, 0.9)
+    err = max(float(jnp.max(jnp.abs(a - b))) for a, b in zip(k_out, r_out))
+    row("kernels/sparsify_ef_128k", us, f"max_err={err:.1e}")
+
+    x = jax.random.normal(jax.random.PRNGKey(3), (65536,))
+    us = time_call(lambda: ops.global_topk(x, 64, block=8192))
+    gv, gi = ops.global_topk(x, 64, block=8192)
+    ref_idx = set(np.argsort(-np.abs(np.asarray(x)))[:64])
+    ok = set(np.asarray(gi)) == ref_idx
+    row("kernels/global_topk_64k", us, f"exact={'yes' if ok else 'NO'}")
+
+    from repro.core.autoencoder import init_lgc_autoencoder, lgc_encode
+    ae = init_lgc_autoencoder(jax.random.PRNGKey(4))
+    gvec = jax.random.normal(jax.random.PRNGKey(5), (16384,))
+    us = time_call(lambda: ops.lgc_encode_fast(ae, gvec))
+    zf = ops.lgc_encode_fast(ae, gvec)
+    zr = lgc_encode(ae, gvec)[0]
+    err = float(jnp.max(jnp.abs(zf - zr)))
+    row("kernels/lgc_encode_16k", us, f"max_err={err:.1e}")
+
+
+if __name__ == "__main__":
+    main()

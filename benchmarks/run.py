@@ -1,0 +1,70 @@
+"""Benchmark harness — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only table6_compression]
+
+Prints ``name,us_per_call,derived`` CSV.  Roofline numbers come from the
+dry-run corpus (launch/dryrun.py + launch/roofline.py), summarized here
+when available."""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+MODULES = [
+    "table4_information",
+    "table5_phase_timing",
+    "table6_compression",
+    "fig3_mutual_information",
+    "fig13_sparsification_strategies",
+    "fig14_ae_convergence",
+    "kernels_bench",
+]
+
+
+def roofline_summary():
+    """Append roofline rows when the dry-run corpus exists."""
+    import os
+    if not os.path.isdir("experiments/dryrun"):
+        return
+    try:
+        from benchmarks.common import row
+        from repro.launch.roofline import load_all
+        rows = load_all("experiments/dryrun")
+        for r in rows:
+            row(f"roofline/{r.arch}/{r.shape}/{r.mesh}/{r.compression}",
+                0.0,
+                f"bound={r.dominant} Tc={r.t_comp:.4f}s Tm={r.t_mem:.4f}s"
+                f" Tx={r.t_coll:.4f}s useful={r.useful_ratio:.2f}"
+                f" hbm={r.mem_gb:.1f}GB")
+    except Exception:
+        traceback.print_exc()
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--only", default="")
+    args = p.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+    print("name,us_per_call,derived")
+    failures = []
+    for mod_name in MODULES:
+        if only and mod_name not in only:
+            continue
+        print(f"# --- {mod_name} ---", flush=True)
+        try:
+            mod = __import__(f"benchmarks.{mod_name}", fromlist=["main"])
+            mod.main()
+        except Exception:
+            traceback.print_exc()
+            failures.append(mod_name)
+    if only is None:
+        print("# --- roofline (from dry-run corpus) ---", flush=True)
+        roofline_summary()
+    if failures:
+        print(f"# FAILURES: {failures}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

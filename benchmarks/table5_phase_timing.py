@@ -1,0 +1,45 @@
+"""Paper Table V: duration of one distributed-training iteration for each
+of the three gradient-update phases (full / top-k+AE / compressed), for
+both LGC variants.  Run at smoke scale on the simulated-nodes path; the
+paper's observation to reproduce: compressed updates are CHEAPER per
+iteration than top-k+AE-training updates, and the RAR variant is cheaper
+than PS."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import row, time_call
+from repro.configs.base import CompressionConfig
+from repro.core import build_compressor
+from repro.core.phases import PHASE_COMPRESSED, PHASE_TOPK_AE, PHASE_WARMUP
+
+K = 4
+PARAMS = {
+    "embed": {"w": jnp.zeros((64, 32))},
+    "l1": {"w": jnp.zeros((256, 256))},
+    "l2": {"w": jnp.zeros((256, 256))},
+    "l3": {"w": jnp.zeros((256, 256))},
+    "lm_head": {"w": jnp.zeros((32, 64))},
+}
+
+
+def main():
+    for method in ("lgc_ps", "lgc_rar"):
+        cc = CompressionConfig(method=method, sparsity=0.01,
+                               innovation_sparsity=0.001, warmup_steps=1,
+                               ae_train_steps=2)
+        comp = build_compressor(cc, PARAMS, K)
+        states = comp.init_sim_states(jax.random.PRNGKey(0))
+        g = jax.random.normal(jax.random.PRNGKey(1),
+                              (K, comp.layout.n_total)) * 0.01
+        for phase, label in ((PHASE_WARMUP, "full_update"),
+                             (PHASE_TOPK_AE, "topk_update"),
+                             (PHASE_COMPRESSED, "compressed_update")):
+            fn = jax.jit(comp.sim_step, static_argnums=(3,))
+            us = time_call(lambda: fn(states, g, 5, phase)[0])
+            row(f"table5/{method}/{label}", us, f"phase={phase}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Reproduce the paper's Section III experiment interactively: train the
+paper's ConvNet5 on two simulated nodes and watch the per-layer mutual
+information between the nodes' gradients — the empirical basis for LGC.
+
+    PYTHONPATH=src python examples/information_plane.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.convnet5 import smoke_config
+from repro.core.info_theory import gradient_information
+from repro.data import synthetic_image_batches
+from repro.models.convnet import convnet5_loss, init_convnet5
+
+cfg = smoke_config()
+params = init_convnet5(jax.random.PRNGKey(0), cfg)
+data = synthetic_image_batches(cfg.num_classes, 32, cfg.image_size, seed=5)
+
+
+@jax.jit
+def two_node_grads(params, batch):
+    def node(i):
+        sl = lambda x: jax.lax.dynamic_slice_in_dim(x, i * 16, 16)
+        lb = {"images": sl(batch["images"]), "labels": sl(batch["labels"])}
+        return jax.grad(lambda p: convnet5_loss(p, cfg, lb)[0])(params)
+    return jax.vmap(node)(jnp.arange(2))
+
+
+print(f"{'step':>5s} " + " ".join(f"conv{i}:MI/H" for i in
+                                  range(len(cfg.channels))))
+for step in range(30):
+    batch = next(data)
+    g2 = two_node_grads(params, batch)
+    if step % 5 == 0:
+        fracs = []
+        for i in range(len(cfg.channels)):
+            w = np.asarray(g2[f"conv{i}"]["w"])
+            info = gradient_information(w[0].ravel(), w[1].ravel(), bins=64)
+            fracs.append(info.mi_fraction)
+        print(f"{step:5d} " + " ".join(f"{f:10.2f}" for f in fracs))
+    mean_g = jax.tree_util.tree_map(lambda g: g.mean(0), g2)
+    params = jax.tree_util.tree_map(lambda p, g: p - 0.05 * g, params,
+                                    mean_g)
+print("\nhigh MI fraction across middle layers ==> the common/innovation"
+      "\ndecomposition that LGC's autoencoder exploits (paper Fig. 3/4).")

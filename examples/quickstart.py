@@ -1,0 +1,53 @@
+"""Quickstart: compress the gradients of a toy model with LGC in ~30 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import CompressionConfig
+from repro.core import build_compressor
+from repro.core.phases import phase_for_step
+from repro.core.rate import rate_report
+from repro.utils.tree import tree_flatten_vector, tree_unflatten_vector
+
+# a toy two-layer model, K=4 simulated nodes
+params = {"embed": {"w": jnp.zeros((64, 32))},
+          "hidden": {"w": jax.random.normal(jax.random.PRNGKey(0),
+                                            (512, 512)) * 0.05},
+          "lm_head": {"w": jnp.zeros((32, 64))}}
+K = 4
+
+cc = CompressionConfig(method="lgc_rar", sparsity=0.01,
+                       warmup_steps=2, ae_train_steps=5)
+comp = build_compressor(cc, params, K)
+states = comp.init_sim_states(jax.random.PRNGKey(1))
+print(f"gradient vector n={comp.layout.n_total}, top-k mu={comp.layout.mu}, "
+      f"AE input mu_pad={comp.layout.mu_pad}")
+
+report = rate_report(cc, comp.layout, K)
+print(f"rate: {report.bytes_per_node:.0f} B/node/step "
+      f"(baseline {report.baseline_bytes:.0f} B) -> "
+      f"CR {report.compression_ratio:.0f}x")
+
+rng = jax.random.PRNGKey(2)
+# stand-in per-node gradients: a STRUCTURED shared common part (smooth —
+# real gradients have local correlation, see Section III of the paper)
+# plus small per-node innovations. An i.i.d. Gaussian would be
+# information-theoretically incompressible through the 4x bottleneck.
+t = jnp.arange(comp.layout.n_total) / comp.layout.n_total
+base = jnp.sin(2 * jnp.pi * 3 * t) + 0.5 * jnp.sin(2 * jnp.pi * 11 * t)
+for step in range(10):
+    rng, k = jax.random.split(rng)
+    common = base * (1.0 + 0.1 * jax.random.normal(k, ())) * 0.01
+    g_nodes = common[None] + 0.0005 * jax.random.normal(
+        jax.random.fold_in(k, 1), (K, comp.layout.n_total))
+    phase = phase_for_step(step, cc)
+    g_global, states, stats = comp.sim_step(states, g_nodes, step, phase)
+    err = float(jnp.linalg.norm(g_global - g_nodes.mean(0))
+                / jnp.linalg.norm(g_nodes.mean(0)))
+    print(f"step {step} phase={phase:10s} rel_err_vs_dense_mean={err:.3f}")
+
+g_tree = tree_unflatten_vector(g_global, params)
+print("reconstructed gradient tree:",
+      jax.tree_util.tree_map(lambda x: x.shape, g_tree))

@@ -1,0 +1,25 @@
+"""Serve a small model with batched requests: prefill a batch of prompts,
+then decode tokens in lockstep — the inference counterpart of the train
+driver (the assigned decode_32k/long_500k shapes exercise this same path
+at production scale via the dry-run).
+
+    PYTHONPATH=src python examples/serve_batched.py --arch mamba2-130m
+"""
+import argparse
+
+parser = argparse.ArgumentParser()
+parser.add_argument("--arch", default="mamba2-130m",
+                    help="any assigned arch (smoke variant is used)")
+parser.add_argument("--batch", type=int, default=4)
+parser.add_argument("--prompt-len", type=int, default=48)
+parser.add_argument("--gen", type=int, default=24)
+args = parser.parse_args()
+
+from repro.launch.serve import main as serve_main  # noqa: E402
+
+gen = serve_main(["--arch", args.arch, "--smoke",
+                  "--batch", str(args.batch),
+                  "--prompt-len", str(args.prompt_len),
+                  "--gen", str(args.gen),
+                  "--temperature", "0.8"])
+print(f"generated {gen.shape[0]} x {gen.shape[1]} tokens")

@@ -1,0 +1,58 @@
+"""Regenerate the §Dry-run and §Roofline tables of EXPERIMENTS.md from the
+experiments/dryrun corpus.
+
+    PYTHONPATH=src python scripts/gen_experiments_sections.py > /tmp/sections.md
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.roofline import (fmt_s, load_all, markdown_table)  # noqa
+
+
+def dryrun_table(dir_="experiments/dryrun"):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(dir_, "*.json"))):
+        d = json.load(open(path))
+        m = d.get("memory", {})
+        w = d.get("walked", {})
+        coll = w.get("collective_bytes_per_device", {})
+        coll_s = " ".join(
+            f"{k.replace('collective-','c-')}:{v/1e6:.0f}MB"
+            for k, v in coll.items() if not k.startswith("_")) or "-"
+        rows.append(
+            f"| {d['arch']} | {d['shape']} | {d['mesh']} | "
+            f"{d.get('compression','none')} | "
+            f"{d['compile_seconds']:.0f}s | "
+            f"{m.get('argument_size_in_bytes',0)/1e9:.1f} | "
+            f"{m.get('temp_size_in_bytes',0)/1e9:.1f} | "
+            f"{w.get('flops_per_device',0)/1e12:.1f} | "
+            f"{coll_s} |")
+    hdr = ("| arch | shape | mesh | comp | compile | args GB/dev | "
+           "temp GB/dev | TFLOP/dev | collective bytes/dev |\n"
+           "|---|---|---|---|---|---|---|---|---|\n")
+    return hdr + "\n".join(rows)
+
+
+def main():
+    print("### §Dry-run (generated)\n")
+    print(dryrun_table())
+    print("\n### §Roofline (generated)\n")
+    rows = load_all("experiments/dryrun")
+    print(markdown_table(rows))
+    # summary stats
+    n_fit = sum(r.fits for r in rows)
+    doms = {}
+    for r in rows:
+        doms[r.dominant] = doms.get(r.dominant, 0) + 1
+    print(f"\n{len(rows)} combos; fits-in-16GB: {n_fit}; "
+          f"dominant-term histogram: {doms}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""Re-run the loop-aware HLO walker over saved (gzipped) HLO dumps and
+refresh the 'walked' block of each dry-run JSON — no recompilation.
+
+    PYTHONPATH=src python scripts/reanalyze_hlo.py [dir=experiments/dryrun]
+"""
+import glob
+import gzip
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch import hlo_walker as W  # noqa: E402
+
+
+def main():
+    dir_ = sys.argv[1] if len(sys.argv) > 1 else "experiments/dryrun"
+    for path in sorted(glob.glob(os.path.join(dir_, "*.json"))):
+        tag = os.path.basename(path)[:-5]
+        hlo_path = os.path.join(dir_, "hlo", tag + ".txt.gz")
+        if not os.path.exists(hlo_path):
+            print("no hlo dump:", tag)
+            continue
+        with gzip.open(hlo_path, "rt") as f:
+            txt = f.read()
+        walked = W.analyze(txt)
+        with open(path) as f:
+            rec = json.load(f)
+        rec["walked"] = walked
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+        print(f"{tag}: flops/dev={walked['flops_per_device']:.2e} "
+              f"coll={ {k: round(v/1e6) for k, v in walked['collective_bytes_per_device'].items()} }MB")
+
+
+if __name__ == "__main__":
+    main()

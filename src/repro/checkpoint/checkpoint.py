@@ -1,0 +1,54 @@
+"""Flat-npz checkpointing: PyTree <-> .npz with path-keyed entries.
+
+Dependency-free (no orbax): leaves are fetched to host, keyed by their
+tree path, and restored into an identically-structured template.  Includes
+step metadata and is atomic (write to tmp, rename).
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+from typing import Any, Dict, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree: Any) -> Dict[str, np.ndarray]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = jax.tree_util.keystr(path, simple=True, separator="/")
+        out[key] = np.asarray(leaf)
+    return out
+
+
+def save_checkpoint(path: str, tree: Any, step: int) -> None:
+    payload = _flatten(tree)
+    payload["__step__"] = np.asarray(step, np.int64)
+    d = os.path.dirname(os.path.abspath(path))
+    os.makedirs(d, exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=d, suffix=".npz.tmp")
+    os.close(fd)
+    try:
+        with open(tmp, "wb") as f:
+            np.savez(f, **payload)
+        os.replace(tmp, path)
+    finally:
+        if os.path.exists(tmp):
+            os.remove(tmp)
+
+
+def load_checkpoint(path: str, template: Any) -> Tuple[Any, int]:
+    """Restore into the structure of ``template``; returns (tree, step)."""
+    with np.load(path) as z:
+        step = int(z["__step__"])
+        flat, treedef = jax.tree_util.tree_flatten_with_path(template)
+        leaves = []
+        for p, leaf in flat:
+            key = jax.tree_util.keystr(p, simple=True, separator="/")
+            arr = z[key]
+            assert arr.shape == tuple(leaf.shape), (key, arr.shape,
+                                                    leaf.shape)
+            leaves.append(arr.astype(leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves), step

@@ -1,0 +1,38 @@
+"""Architecture configs. Importing this package registers all archs."""
+from repro.configs.base import (
+    ARCH_REGISTRY,
+    INPUT_SHAPES,
+    CompressionConfig,
+    InputShape,
+    ModelConfig,
+    TrainConfig,
+    get_arch,
+    list_archs,
+)
+# Assigned architecture pool (10 archs, 6 families).
+from repro.configs import (  # noqa: F401
+    phi3_medium_14b,
+    deepseek_v3_671b,
+    musicgen_medium,
+    jamba_v0_1_52b,
+    arctic_480b,
+    llama3_2_1b,
+    llama3_2_vision_90b,
+    mamba2_130m,
+    granite_8b,
+    qwen2_1_5b,
+    convnet5,
+)
+
+ASSIGNED_ARCHS = (
+    "phi3-medium-14b",
+    "deepseek-v3-671b",
+    "musicgen-medium",
+    "jamba-v0.1-52b",
+    "arctic-480b",
+    "llama3.2-1b",
+    "llama-3.2-vision-90b",
+    "mamba2-130m",
+    "granite-8b",
+    "qwen2-1.5b",
+)

@@ -1,0 +1,25 @@
+"""ConvNet5 — the paper's own Section VI-E model (5 conv layers + BN + ReLU).
+
+NOT part of the assigned-architecture pool; registered for the paper-faithful
+LGC experiments (mutual-information analysis, sparsification-strategy
+ablation, compression-ratio tables) at CPU-tractable scale.
+"""
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class ConvNet5Config:
+    name: str = "convnet5"
+    in_channels: int = 3
+    channels: tuple = (32, 64, 128, 128, 256)
+    num_classes: int = 200          # Tiny ImageNet classes (paper VI-E)
+    image_size: int = 32
+
+
+def config() -> ConvNet5Config:
+    return ConvNet5Config()
+
+
+def smoke_config() -> ConvNet5Config:
+    return ConvNet5Config(name="convnet5-smoke", channels=(8, 16, 16, 16, 32),
+                          num_classes=10, image_size=16)

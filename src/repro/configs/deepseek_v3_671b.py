@@ -1,0 +1,34 @@
+"""deepseek-v3-671b [moe] — MLA, 1 shared + 256 routed top-8, MTP
+[arXiv:2412.19437].
+
+Geometry per the assignment: 61L d_model=7168 128H d_ff(expert)=2048
+vocab=129280, MoE 256 experts top-8.  Attention is MLA (multi-head latent
+attention): queries/keys/values are projected through low-rank latents, and
+the KV *cache* stores only the 512-dim latent + 64-dim decoupled-RoPE key —
+which is why 32k/500k-token decode is cheap for this arch.
+"""
+from repro.configs.base import MLAConfig, ModelConfig, MoEConfig, register_arch
+
+
+@register_arch("deepseek-v3-671b")
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="deepseek-v3-671b",
+        family="moe",
+        n_layers=61,
+        d_model=7168,
+        n_heads=128,
+        n_kv_heads=128,           # MLA: all heads share the latent cache
+        d_ff=18432,               # dense-layer FFN (first layers are dense in
+                                  # the real model; we use MoE every block and
+                                  # d_ff for the shared expert path)
+        vocab_size=129280,
+        head_dim=128,
+        mla=MLAConfig(q_lora_rank=1536, kv_lora_rank=512,
+                      qk_nope_head_dim=128, qk_rope_head_dim=64,
+                      v_head_dim=128),
+        moe=MoEConfig(num_experts=256, top_k=8, d_ff_expert=2048,
+                      num_shared_experts=1, aux_loss_coef=0.0001),
+        mtp_depth=1,
+        source="arXiv:2412.19437",
+    )

@@ -1,0 +1,28 @@
+"""llama-3.2-vision-90b [vlm] — cross-attn image layers
+[hf:meta-llama/Llama-3.2-11B-Vision].
+
+100 layers = 20 superblocks of (4 self-attn + 1 cross-attn).  Cross-attn
+layers consume precomputed ViT patch embeddings — the vision encoder +
+projector are stubbed per the assignment carve-out; ``input_specs()``
+provides (batch, num_encoder_tokens, encoder_dim) embeddings.
+"""
+from repro.configs.base import ATTN, CROSS, ModelConfig, register_arch
+
+
+@register_arch("llama-3.2-vision-90b")
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="llama-3.2-vision-90b",
+        family="vlm",
+        n_layers=100,
+        d_model=8192,
+        n_heads=64,
+        n_kv_heads=8,
+        d_ff=28672,
+        vocab_size=128256,
+        rope_theta=500000.0,
+        block_pattern=(ATTN, ATTN, ATTN, ATTN, CROSS),
+        num_encoder_tokens=1601,   # ViT-H/14 @ 560px: 1601 patch tokens
+        encoder_dim=1280,
+        source="hf:meta-llama/Llama-3.2-11B-Vision",
+    )

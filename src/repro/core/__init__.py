@@ -1,0 +1,26 @@
+"""Learned Gradient Compression — the paper's contribution (Sections III-V).
+
+Sub(modules):
+  sparsify     top-k selection + DGC-style momentum-corrected error feedback
+  autoencoder  Tables I/II conv autoencoders (PS decoupling / RAR aggregation)
+  compressors  first-class gradient compressors used by the trainer
+  phases       the three-phase training schedule (Section V-B)
+  rate         transmission-rate accounting incl. DEFLATE index coding
+  info_theory  Section III histogram entropy / mutual-information analysis
+"""
+from repro.core.autoencoder import (
+    ae_loss_ps,
+    ae_loss_rar,
+    compressed_length,
+    init_lgc_autoencoder,
+    lgc_decode_ps,
+    lgc_decode_rar,
+    lgc_encode,
+)
+from repro.core.phases import (
+    PHASE_COMPRESSED,
+    PHASE_TOPK_AE,
+    PHASE_WARMUP,
+    phase_for_step,
+)
+from repro.core.compressors import build_compressor, GradientCompressor

@@ -1,0 +1,31 @@
+"""Three-phase LGC training schedule (paper Section V-B, eqs. 14-16).
+
+Phase 1 (warm-up): raw dense gradients — the first ~200 iterations, when
+weights move fast and any gradient transformation hurts (Fig. 13 shows this
+beats fixed-from-start and DGC's exponential-ramp sparsification).
+Phase 2: top-k sparsified updates while the autoencoder trains online on
+the observed top-k gradients.
+Phase 3: compressed updates through the trained autoencoder.
+
+The phase is resolved in *Python* per step (it is a static property of the
+step index), so each phase jit-compiles its own specialized step — no
+dynamic control flow in the HLO.
+"""
+from repro.configs.base import CompressionConfig
+
+PHASE_WARMUP = "warmup"
+PHASE_TOPK_AE = "topk_ae"
+PHASE_COMPRESSED = "compressed"
+
+
+def phase_for_step(step: int, cc: CompressionConfig) -> str:
+    if cc.method == "none":
+        return PHASE_WARMUP
+    if step < cc.warmup_steps:
+        return PHASE_WARMUP
+    if cc.method in ("lgc_ps", "lgc_rar", "lgc_rar_q8"):
+        if step < cc.warmup_steps + cc.ae_train_steps:
+            return PHASE_TOPK_AE
+        return PHASE_COMPRESSED
+    # sparse_gd / dgc: sparsified from the end of warm-up onward
+    return PHASE_TOPK_AE

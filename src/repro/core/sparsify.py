@@ -1,0 +1,218 @@
+"""Gradient sparsification machinery (paper Section V-A, Algorithms 1-2).
+
+Per-layer top-k selection at fixed rate alpha (0.1%), with DGC-style
+momentum-corrected local accumulation of the unsent gradients:
+
+    u <- m*u + g          (momentum accumulation)
+    v <- v + u            (residual accumulation)
+    send top-k(v); zero u, v at the sent coordinates.
+
+Layer exemptions (Section VI-A): the first layer's weights update with raw
+dense gradients; the last layer's top-k values are transmitted without the
+autoencoder.  Everything else is concatenated into the length-mu vector
+``g~`` that feeds the LGC autoencoder (padded to a multiple of 16 so the
+stride-2 conv stack is shape-exact).
+
+All functions operate on the *flat* gradient vector (leaf tensors raveled
+and concatenated with static offsets), so they are jit-friendly with fully
+static shapes.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+ROLE_DENSE = "dense"            # exempt: raw dense gradient (first layer)
+ROLE_TOPK_ONLY = "topk_only"    # top-k transmitted, but not AE-compressed
+ROLE_COMPRESSED = "compressed"  # top-k -> autoencoder
+
+AE_ALIGN = 16                   # encoder downsamples by 16
+
+
+@dataclass(frozen=True)
+class LeafSpec:
+    path: str
+    offset: int
+    size: int
+    role: str
+    k: int                      # top-k count (0 for dense leaves)
+
+
+@dataclass(frozen=True)
+class GradientLayout:
+    leaves: Tuple[LeafSpec, ...]
+    n_total: int
+    mu: int                     # sum of k over COMPRESSED leaves
+    mu_pad: int                 # mu rounded up to AE_ALIGN
+    k_last: int                 # sum of k over TOPK_ONLY leaves
+
+    @property
+    def compressed(self) -> Tuple[LeafSpec, ...]:
+        return tuple(l for l in self.leaves if l.role == ROLE_COMPRESSED)
+
+    @property
+    def topk_only(self) -> Tuple[LeafSpec, ...]:
+        return tuple(l for l in self.leaves if l.role == ROLE_TOPK_ONLY)
+
+    @property
+    def dense(self) -> Tuple[LeafSpec, ...]:
+        return tuple(l for l in self.leaves if l.role == ROLE_DENSE)
+
+
+def default_role_fn(path: str, index: int, n_leaves: int) -> str:
+    """Paper Section VI-A: first layer dense, last layer top-k w/o AE."""
+    segments = path.lower().split("/")
+    if "embed" in segments or "conv0" in segments:
+        return ROLE_DENSE
+    if "lm_head" in segments or "fc" in segments:
+        return ROLE_TOPK_ONLY
+    return ROLE_COMPRESSED
+
+
+def build_layout(params_template, sparsity: float,
+                 role_fn: Callable[[str, int, int], str] = default_role_fn,
+                 ) -> GradientLayout:
+    flat, _ = jax.tree_util.tree_flatten_with_path(params_template)
+    specs: List[LeafSpec] = []
+    offset = 0
+    n_leaves = len(flat)
+    for i, (path, leaf) in enumerate(flat):
+        pstr = jax.tree_util.keystr(path, simple=True, separator="/")
+        size = int(np.prod(leaf.shape)) if leaf.shape else 1
+        role = role_fn(pstr, i, n_leaves)
+        k = 0
+        if role in (ROLE_COMPRESSED, ROLE_TOPK_ONLY):
+            k = max(1, int(round(size * sparsity)))
+        specs.append(LeafSpec(pstr, offset, size, role, k))
+        offset += size
+    mu = sum(l.k for l in specs if l.role == ROLE_COMPRESSED)
+    mu_pad = ((mu + AE_ALIGN - 1) // AE_ALIGN) * AE_ALIGN
+    k_last = sum(l.k for l in specs if l.role == ROLE_TOPK_ONLY)
+    return GradientLayout(tuple(specs), offset, mu, mu_pad, k_last)
+
+
+# ---------------------------------------------------------------------------
+# error feedback (DGC momentum correction)
+
+
+def momentum_correct(u: jnp.ndarray, v: jnp.ndarray, g: jnp.ndarray,
+                     m: float) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    u_new = m * u + g
+    v_new = v + u_new
+    return u_new, v_new
+
+
+def clear_sent(u: jnp.ndarray, v: jnp.ndarray, indices: jnp.ndarray,
+               n: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Zero the accumulators at transmitted coordinates (sentinel index = n
+    is dropped)."""
+    u = u.at[indices].set(0.0, mode="drop")
+    v = v.at[indices].set(0.0, mode="drop")
+    return u, v
+
+
+# ---------------------------------------------------------------------------
+# top-k selection per leaf (static shapes)
+
+
+def _leaf_topk(seg: jnp.ndarray, k: int, offset: int):
+    vals_abs, idx = jax.lax.top_k(jnp.abs(seg), k)
+    vals = seg[idx]
+    return vals, idx + offset
+
+
+def select_topk(v: jnp.ndarray, layout: GradientLayout):
+    """Top-k per compressed leaf of the residual vector ``v``.
+
+    Returns (values (mu_pad,), indices (mu_pad,) int32).  Padding entries
+    carry value 0 and sentinel index n_total (dropped by scatters).
+    """
+    vals_list, idx_list = [], []
+    for leaf in layout.compressed:
+        seg = jax.lax.dynamic_slice_in_dim(v, leaf.offset, leaf.size)
+        vals, idx = _leaf_topk(seg, leaf.k, leaf.offset)
+        vals_list.append(vals)
+        idx_list.append(idx)
+    pad = layout.mu_pad - layout.mu
+    if pad:
+        vals_list.append(jnp.zeros((pad,), v.dtype))
+        idx_list.append(jnp.full((pad,), layout.n_total, jnp.int32))
+    return (jnp.concatenate(vals_list),
+            jnp.concatenate(idx_list).astype(jnp.int32))
+
+
+def select_topk_last(v: jnp.ndarray, layout: GradientLayout):
+    """Top-k over the exempt last layer(s) (sent raw, no AE)."""
+    if not layout.topk_only:
+        return (jnp.zeros((0,), v.dtype), jnp.zeros((0,), jnp.int32))
+    vals_list, idx_list = [], []
+    for leaf in layout.topk_only:
+        seg = jax.lax.dynamic_slice_in_dim(v, leaf.offset, leaf.size)
+        vals, idx = _leaf_topk(seg, leaf.k, leaf.offset)
+        vals_list.append(vals)
+        idx_list.append(idx)
+    return (jnp.concatenate(vals_list),
+            jnp.concatenate(idx_list).astype(jnp.int32))
+
+
+def dense_part(g: jnp.ndarray, layout: GradientLayout) -> jnp.ndarray:
+    """Zero everywhere except the exempt dense leaves."""
+    mask = np.zeros((layout.n_total,), np.float32)
+    for leaf in layout.dense:
+        mask[leaf.offset:leaf.offset + leaf.size] = 1.0
+    return g * jnp.asarray(mask)
+
+
+def dense_segments(g: jnp.ndarray, layout: GradientLayout) -> jnp.ndarray:
+    """Concatenate ONLY the exempt-dense leaf segments (so the cross-node
+    reduction moves sum(dense sizes) floats, not n — psum'ing the
+    dense_part vector would put n-float traffic on the wire and defeat
+    the compression)."""
+    if not layout.dense:
+        return jnp.zeros((0,), g.dtype)
+    return jnp.concatenate([
+        jax.lax.dynamic_slice_in_dim(g, l.offset, l.size)
+        for l in layout.dense])
+
+
+def scatter_dense_segments(vec: jnp.ndarray, layout: GradientLayout,
+                           n: int) -> jnp.ndarray:
+    """Inverse of :func:`dense_segments` into a length-n dense vector."""
+    out = jnp.zeros((n,), vec.dtype)
+    off = 0
+    for l in layout.dense:
+        out = jax.lax.dynamic_update_slice_in_dim(
+            out, jax.lax.dynamic_slice_in_dim(vec, off, l.size), l.offset,
+            axis=0)
+        off += l.size
+    return out
+
+
+def scatter_to_dense(values: jnp.ndarray, indices: jnp.ndarray,
+                     n: int) -> jnp.ndarray:
+    """Scatter sparse (values, indices) into a length-n dense vector."""
+    return jnp.zeros((n,), values.dtype).at[indices].add(values, mode="drop")
+
+
+def gather_at(v: jnp.ndarray, indices: jnp.ndarray) -> jnp.ndarray:
+    """Gather v at indices; sentinel index (>= len(v)) yields 0."""
+    safe = jnp.minimum(indices, v.shape[0] - 1)
+    vals = v[safe]
+    return jnp.where(indices < v.shape[0], vals, 0.0)
+
+
+def select_innovation(values: jnp.ndarray, frac: float):
+    """PS innovation: the top ``frac`` fraction (by magnitude) of the top-k
+    values vector, kept in-place (zeros elsewhere) — Section V / Fig. 5a.
+
+    Returns (innovation vector (mu_pad,), local indices (k_inv,)).
+    """
+    mu = values.shape[0]
+    k_inv = max(1, int(round(mu * frac)))
+    _, idx = jax.lax.top_k(jnp.abs(values), k_inv)
+    inno = jnp.zeros_like(values).at[idx].set(values[idx])
+    return inno, idx

@@ -1,0 +1,5 @@
+from repro.data.pipeline import (
+    synthetic_image_batches,
+    synthetic_token_batches,
+    text_file_token_batches,
+)

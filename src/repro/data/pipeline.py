@@ -1,0 +1,90 @@
+"""Data pipelines.
+
+Deterministic synthetic generators (seeded per step — reproducible across
+restarts without state files) for the language-model and image tasks, plus
+a real-file byte-level text reader.  Batches come out as host numpy so the
+launcher controls device placement / sharding.
+
+The synthetic LM stream is NOT uniform noise: tokens follow a first-order
+Markov chain with a skewed stationary distribution, so cross-entropy has a
+learnable structure and convergence comparisons between compressors (the
+paper's Fig. 10/11 analogue) are meaningful.
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterator, Optional
+
+import numpy as np
+
+
+def _rng(seed: int, step: int) -> np.random.Generator:
+    return np.random.default_rng(np.random.SeedSequence([seed, step]))
+
+
+def synthetic_token_batches(vocab_size: int, batch: int, seq_len: int,
+                            seed: int = 0,
+                            encoder_tokens: int = 0,
+                            encoder_dim: int = 0,
+                            ) -> Iterator[Dict[str, np.ndarray]]:
+    """Markov-chain token stream.  Yields {"tokens", "labels"} and, when
+    encoder_tokens > 0, precomputed "encoder_embeds" (the VLM/audio
+    frontend stub mandated by the assignment)."""
+    base = np.random.default_rng(seed)
+    # sparse transition structure: each token can go to 8 successors
+    succ = base.integers(0, vocab_size, size=(vocab_size, 8))
+    logits = base.normal(size=(vocab_size, 8)).astype(np.float64)
+    probs = np.exp(logits) / np.exp(logits).sum(-1, keepdims=True)
+    step = 0
+    while True:
+        r = _rng(seed, step)
+        toks = np.empty((batch, seq_len + 1), np.int32)
+        toks[:, 0] = r.integers(0, vocab_size, size=batch)
+        unif = r.random((batch, seq_len))
+        for t in range(seq_len):
+            cur = toks[:, t]
+            cdf = probs[cur].cumsum(-1)
+            choice = (unif[:, t : t + 1] < cdf).argmax(-1)
+            toks[:, t + 1] = succ[cur, choice]
+        out = {"tokens": toks[:, :-1], "labels": toks[:, 1:].copy()}
+        if encoder_tokens:
+            out["encoder_embeds"] = r.normal(
+                size=(batch, encoder_tokens, encoder_dim)).astype(np.float32)
+        yield out
+        step += 1
+
+
+def synthetic_image_batches(num_classes: int, batch: int, image_size: int,
+                            channels: int = 3, seed: int = 0,
+                            ) -> Iterator[Dict[str, np.ndarray]]:
+    """Class-conditional Gaussian-blob images: each class has a fixed
+    random template; samples are template + noise — learnable by ConvNet5
+    within a few hundred steps, which is what the paper's convergence
+    ablations need."""
+    base = np.random.default_rng(seed)
+    templates = base.normal(size=(num_classes, image_size, image_size,
+                                  channels)).astype(np.float32)
+    step = 0
+    while True:
+        r = _rng(seed, step)
+        labels = r.integers(0, num_classes, size=batch).astype(np.int32)
+        noise = r.normal(scale=1.0,
+                         size=(batch, image_size, image_size,
+                               channels)).astype(np.float32)
+        images = templates[labels] + noise
+        yield {"images": images, "labels": labels}
+        step += 1
+
+
+def text_file_token_batches(path: str, batch: int, seq_len: int,
+                            seed: int = 0,
+                            ) -> Iterator[Dict[str, np.ndarray]]:
+    """Byte-level LM batches from a real text file (vocab 256)."""
+    data = np.frombuffer(open(path, "rb").read(), np.uint8).astype(np.int32)
+    assert len(data) > seq_len + 1, "file too small"
+    step = 0
+    while True:
+        r = _rng(seed, step)
+        starts = r.integers(0, len(data) - seq_len - 1, size=batch)
+        toks = np.stack([data[s : s + seq_len + 1] for s in starts])
+        yield {"tokens": toks[:, :-1], "labels": toks[:, 1:].copy()}
+        step += 1

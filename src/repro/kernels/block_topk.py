@@ -1,0 +1,70 @@
+"""Block-local top-k kernel (TPU Pallas).
+
+GPU top-k is a global sort; that algorithm doesn't map to the TPU memory
+hierarchy.  Instead we re-block the problem: the flat gradient is split
+into VMEM-tile-sized blocks and each grid step finds the top-k of ONE
+block with k iterations of (max -> record -> mask) on the VPU.  A
+hierarchical merge (handled in ops.py with jax.lax.top_k over the tiny
+per-block candidate set, k·n_blocks elements) yields the exact global
+top-k as long as k_block >= k_global/n_blocks holds — which ops.py
+enforces by construction (k_block = k_global, i.e. the per-block candidate
+set always contains the global winners).
+
+This is DGC's sampled-threshold idea rethought for HBM->VMEM streaming:
+one pass over the data, no global sort, exact result.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANE = 128
+
+
+def _kernel(x_ref, vals_ref, idx_ref, *, k: int, block: int):
+    x = x_ref[0]                                     # (block//LANE, LANE)
+    mag = jnp.abs(x)
+    flat_idx = (jax.lax.broadcasted_iota(jnp.int32, x.shape, 0) * LANE
+                + jax.lax.broadcasted_iota(jnp.int32, x.shape, 1))
+
+    def body(i, carry):
+        mag, vals, idxs = carry
+        m = jnp.max(mag)
+        # first position achieving the max
+        is_max = (mag == m)
+        pos = jnp.min(jnp.where(is_max, flat_idx, block))
+        val = jnp.sum(jnp.where(flat_idx == pos, x, 0.0))
+        vals = vals.at[i].set(val)
+        idxs = idxs.at[i].set(pos)
+        mag = jnp.where(flat_idx == pos, -1.0, mag)
+        return mag, vals, idxs
+
+    vals0 = jnp.zeros((k,), x.dtype)
+    idxs0 = jnp.zeros((k,), jnp.int32)
+    _, vals, idxs = jax.lax.fori_loop(0, k, body, (mag, vals0, idxs0))
+    vals_ref[0, :] = vals
+    idx_ref[0, :] = idxs
+
+
+@functools.partial(jax.jit, static_argnames=("k", "interpret"))
+def block_topk(x: jnp.ndarray, k: int, interpret: bool = True):
+    """x: (n_blocks, block) f32, block % 128 == 0.  Returns per-block
+    (values (n_blocks, k), indices (n_blocks, k) int32, local to block)."""
+    n_blocks, block = x.shape
+    assert block % LANE == 0, block
+    kern = functools.partial(_kernel, k=k, block=block)
+    vals, idx = pl.pallas_call(
+        kern,
+        grid=(n_blocks,),
+        in_specs=[pl.BlockSpec((1, block // LANE, LANE),
+                               lambda i: (i, 0, 0))],
+        out_specs=[pl.BlockSpec((1, k), lambda i: (i, 0)),
+                   pl.BlockSpec((1, k), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((n_blocks, k), x.dtype),
+                   jax.ShapeDtypeStruct((n_blocks, k), jnp.int32)],
+        interpret=interpret,
+    )(x.reshape(n_blocks, block // LANE, LANE))
+    return vals, idx

@@ -1,0 +1,135 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+Handle padding to tile alignment, threshold estimation for the fused EF
+kernel, the im2col lowering of the LGC encoder convs onto the fused
+matmul kernel, and the hierarchical merge for exact global top-k.
+
+``interpret`` defaults to True (CPU validation per the hardware-adaptation
+contract); pass False on real TPUs.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import block_topk as _bt
+from repro.kernels import matmul_lrelu as _mm
+from repro.kernels import sparsify_ef as _ef
+
+
+def _pad_to(x, mult, value=0.0):
+    n = x.shape[0]
+    pad = (-n) % mult
+    if pad:
+        x = jnp.concatenate([x, jnp.full((pad,) + x.shape[1:], value,
+                                         x.dtype)])
+    return x, pad
+
+
+# ---------------------------------------------------------------------------
+# fused error-feedback sparsification
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def estimate_threshold(v: jnp.ndarray, k: int, sample_stride: int = 32,
+                       interpret: bool = True) -> jnp.ndarray:
+    """DGC sampled-threshold on TPU: top-k over a strided VMEM-resident
+    subsample, scaled to the full population.  Exactness is not required —
+    the EF accumulators re-absorb anything the threshold misses."""
+    sample = jnp.abs(v[::sample_stride])
+    k_s = max(1, min(sample.shape[0], int(np.ceil(k / sample_stride))))
+    vals, _ = jax.lax.top_k(sample, k_s)
+    return vals[-1]
+
+
+def sparsify_ef(g, u, v, tau, momentum, interpret: bool = True):
+    """Fused EF pass over arbitrary-length flat vectors (auto-padded)."""
+    n = g.shape[0]
+    gp, pad = _pad_to(g, _ef.TILE)
+    up, _ = _pad_to(u, _ef.TILE)
+    vp, _ = _pad_to(v, _ef.TILE)
+    u2, v2, sent = _ef.sparsify_ef(
+        gp, up, vp, jnp.asarray(tau, jnp.float32),
+        jnp.asarray(momentum, jnp.float32), interpret=interpret)
+    return u2[:n], v2[:n], sent[:n]
+
+
+# ---------------------------------------------------------------------------
+# exact global top-k via block-local top-k + tiny merge
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block", "interpret"))
+def global_topk(x: jnp.ndarray, k: int, block: int = 64 * 128,
+                interpret: bool = True):
+    """Exact global top-|x| selection: block-local top-k kernel + merge.
+
+    Each block keeps its own top-k candidates (the global winners are a
+    subset by pigeonhole), then jax.lax.top_k merges the tiny candidate
+    set (k * n_blocks elements, VMEM-resident).
+    Returns (values (k,), global indices (k,) int32).
+    """
+    n = x.shape[0]
+    xp, _ = _pad_to(x, block)
+    nb = xp.shape[0] // block
+    kb = min(k, block)
+    vals, idx = _bt.block_topk(xp.reshape(nb, block), kb,
+                               interpret=interpret)
+    gidx = idx + (jnp.arange(nb, dtype=jnp.int32) * block)[:, None]
+    cand_vals = vals.reshape(-1)
+    cand_idx = gidx.reshape(-1)
+    # mask padding positions out of candidacy
+    valid = cand_idx < n
+    mags = jnp.where(valid, jnp.abs(cand_vals), -1.0)
+    _, top = jax.lax.top_k(mags, k)
+    return cand_vals[top], cand_idx[top]
+
+
+# ---------------------------------------------------------------------------
+# LGC encoder through the fused matmul kernel
+
+
+def _im2col_1d(x: jnp.ndarray, ksize: int, stride: int) -> jnp.ndarray:
+    """x: (L, C) -> (L_out, ksize*C), SAME padding."""
+    L, C = x.shape
+    L_out = (L + stride - 1) // stride
+    pad_total = max((L_out - 1) * stride + ksize - L, 0)
+    lo = pad_total // 2
+    xp = jnp.pad(x, ((lo, pad_total - lo), (0, 0)))
+    starts = jnp.arange(L_out) * stride
+    cols = jax.vmap(
+        lambda s: jax.lax.dynamic_slice_in_dim(xp, s, ksize, 0))(starts)
+    return cols.reshape(L_out, ksize * C)
+
+
+def conv1d_lrelu(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 stride: int, apply_lrelu: bool = True,
+                 interpret: bool = True) -> jnp.ndarray:
+    """One LGC-AE conv layer on the MXU kernel.  x: (L, C_in); w:
+    (ksize, C_in, C_out).  Returns (L_out, C_out) f32."""
+    ksize, C_in, C_out = w.shape
+    cols = _im2col_1d(x, ksize, stride)                   # (L_out, k*C_in)
+    M, K = cols.shape
+    Mp = (-M) % _mm.TM
+    Kp = (-K) % _mm.TK
+    Np = (-C_out) % _mm.TN
+    cols = jnp.pad(cols, ((0, Mp), (0, Kp)))
+    wf = jnp.pad(w.reshape(K, C_out), ((0, Kp), (0, Np)))
+    bf = jnp.pad(b, (0, Np))
+    y = _mm.matmul_bias_lrelu(cols, wf, bf, apply_lrelu=apply_lrelu,
+                              interpret=interpret)
+    return y[:M, :C_out]
+
+
+def lgc_encode_fast(ae_params, g: jnp.ndarray, interpret: bool = True):
+    """Kernel-backed version of core.autoencoder.lgc_encode for a single
+    vector g: (L,) with L % 16 == 0.  Returns (L/16, 4)."""
+    from repro.core.autoencoder import ENCODER_SPEC
+    x = g[:, None].astype(jnp.float32)
+    for p, (_c, _k, s) in zip(ae_params["encoder"], ENCODER_SPEC):
+        x = conv1d_lrelu(x, p["w"], p["b"], s, apply_lrelu=True,
+                         interpret=interpret)
+    return x

@@ -1,0 +1,62 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose targets in tests)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+LEAKY_SLOPE = 0.01
+
+
+def sparsify_ef_ref(g, u, v, tau, momentum):
+    """Oracle for kernels.sparsify_ef.sparsify_ef."""
+    u_new = momentum * u + g
+    v_new = v + u_new
+    keep = jnp.abs(v_new) >= tau
+    sent = jnp.where(keep, v_new, 0.0)
+    return (jnp.where(keep, 0.0, u_new),
+            jnp.where(keep, 0.0, v_new),
+            sent)
+
+
+def block_topk_ref(x, k):
+    """Oracle for kernels.block_topk.block_topk.  x: (n_blocks, block).
+
+    Ties broken by LOWEST index first (matching the kernel's jnp.min over
+    max positions)."""
+    mag = jnp.abs(x)
+    # lexicographic: magnitude desc, then index asc — implement by
+    # perturbing equal magnitudes with a tiny index-based penalty is
+    # fragile; instead replicate the kernel's iterative extraction.
+    def one_block(row):
+        def body(i, carry):
+            m, vals, idxs = carry
+            top = jnp.max(m)
+            pos = jnp.argmax(m == top)
+            vals = vals.at[i].set(row[pos])
+            idxs = idxs.at[i].set(pos)
+            m = m.at[pos].set(-1.0)
+            return m, vals, idxs
+        m0 = jnp.abs(row)
+        vals0 = jnp.zeros((k,), row.dtype)
+        idxs0 = jnp.zeros((k,), jnp.int32)
+        _, vals, idxs = jax.lax.fori_loop(0, k, body, (m0, vals0, idxs0))
+        return vals, idxs
+    return jax.vmap(one_block)(x)
+
+
+def matmul_bias_lrelu_ref(x, w, b, apply_lrelu=True):
+    """Oracle for kernels.matmul_lrelu.matmul_bias_lrelu."""
+    y = x.astype(jnp.float32) @ w.astype(jnp.float32) + b
+    if apply_lrelu:
+        y = jnp.where(y >= 0, y, LEAKY_SLOPE * y)
+    return y
+
+
+def conv1d_lrelu_ref(x, w, b, stride, apply_lrelu=True):
+    """Oracle for ops.conv1d_lrelu (SAME padding, NWC/WIO)."""
+    y = jax.lax.conv_general_dilated(
+        x[None], w, window_strides=(stride,), padding="SAME",
+        dimension_numbers=("NWC", "WIO", "NWC"))[0] + b
+    if apply_lrelu:
+        y = jnp.where(y >= 0, y, LEAKY_SLOPE * y)
+    return y

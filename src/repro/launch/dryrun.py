@@ -1,0 +1,237 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run (deliverable e).
+
+Lowers + compiles every step kind for any (arch x input-shape x mesh)
+combination from ShapeDtypeStructs — no allocation — and records
+memory_analysis / cost_analysis / per-collective bytes to JSON for the
+roofline (deliverable g).
+
+NOTE the two lines above MUST stay the very first statements: jax locks
+the device count on first init, and the production meshes need 512
+placeholder devices.  Do not import this module from tests.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch llama3.2-1b \
+        --shape train_4k [--multi-pod] [--compression lgc_rar] \
+        [--out experiments/dryrun]
+    PYTHONPATH=src python -m repro.launch.dryrun --all   # every combo
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+
+
+def parse_args(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default="llama3.2-1b")
+    p.add_argument("--shape", default="train_4k")
+    p.add_argument("--multi-pod", action="store_true")
+    p.add_argument("--both-meshes", action="store_true")
+    p.add_argument("--compression", default="none")
+    p.add_argument("--sparsity", type=float, default=0.001)
+    p.add_argument("--out", default="experiments/dryrun")
+    p.add_argument("--all", action="store_true",
+                   help="run every (arch x shape) on both meshes in "
+                        "subprocesses")
+    p.add_argument("--print-hlo", action="store_true")
+    p.add_argument("--fsdp", default="auto", choices=["auto", "on", "off"])
+    return p.parse_args(argv)
+
+
+def _result_path(out_dir, arch, shape, mesh_name, compression):
+    tag = f"{arch}__{shape}__{mesh_name}"
+    if compression != "none":
+        tag += f"__{compression}"
+    return os.path.join(out_dir, tag + ".json")
+
+
+def run_one(args) -> dict:
+    import jax
+    import jax.tree_util as jtu
+    import numpy as np
+
+    from repro.configs import INPUT_SHAPES, get_arch
+    from repro.configs.base import CompressionConfig, TrainConfig
+    from repro.launch import hlo_analysis as H
+    from repro.launch.input_specs import batch_specs, cache_specs, params_specs
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.steps import (make_auto_train_step, make_decode_step,
+                                    make_lgc_train_step, make_prefill_step)
+    from repro.models import build_model
+    from repro.utils import get_logger
+    from repro.utils.tree import tree_size_bytes
+
+    log = get_logger("dryrun")
+    cfg = get_arch(args.arch)
+    shape = INPUT_SHAPES[args.shape]
+    window_sub = False
+    if shape.name == "long_500k" and cfg.n_heads > 0 \
+            and cfg.sliding_window == 0 and cfg.family not in ("hybrid",) \
+            and cfg.mla is None:
+        # sub-quadratic variant mandated for pure full-attention archs:
+        # sliding-window attention (window 8192), recorded in the result
+        # and in DESIGN.md / EXPERIMENTS.md.  Hybrid (few attn layers) and
+        # MLA (latent linear-size cache) run long_500k natively.
+        import dataclasses as _dc
+        cfg = _dc.replace(cfg, sliding_window=8192)
+        window_sub = True
+        log.info("long_500k: sliding-window(8192) substitution for %s",
+                 cfg.name)
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    mesh_name = "pod2x16x16" if args.multi_pod else "pod16x16"
+    model = build_model(cfg)
+    p_shapes = params_specs(model)
+    n_params = sum(int(np.prod(l.shape))
+                   for l in jtu.tree_leaves(p_shapes))
+    log.info("%s x %s on %s  (%.2fB params)", args.arch, args.shape,
+             mesh_name, n_params / 1e9)
+
+    t0 = time.time()
+    mesh_ctx = jax.set_mesh(mesh)      # enables P-spec sharding hints
+    mesh_ctx.__enter__()
+    if shape.kind == "train":
+        tc = TrainConfig(
+            optimizer="adamw",
+            compression=CompressionConfig(method=args.compression,
+                                          sparsity=args.sparsity))
+        batch_tree = batch_specs(cfg, shape)
+        if args.compression == "none":
+            fsdp = (args.fsdp == "on") if args.fsdp != "auto" else \
+                (n_params > 2e9)
+            ats = make_auto_train_step(model, tc, mesh, fsdp=fsdp)
+            fn = ats.step_fn(batch_tree)
+            o_shapes = jax.eval_shape(ats.optimizer.init, p_shapes)
+            lowered = fn.lower(p_shapes, o_shapes, batch_tree, 0)
+        else:
+            lts = make_lgc_train_step(model, tc, mesh)
+            fn = lts.make_step("compressed", batch_tree)
+            o_shapes = jax.eval_shape(lts.optimizer.init, p_shapes)
+            comp_shapes = jax.eval_shape(
+                lambda k: lts.compressor.init_state(k),
+                jax.random.PRNGKey(0))
+            comp_tree = {
+                "u": jax.ShapeDtypeStruct(
+                    (lts.dp_size, lts.mp_size, lts.n_local), "float32"),
+                "v": jax.ShapeDtypeStruct(
+                    (lts.dp_size, lts.mp_size, lts.n_local), "float32"),
+            }
+            for k in ("ae", "ae_mom"):
+                if k in comp_shapes:
+                    comp_tree[k] = comp_shapes[k]
+            lowered = fn.lower(p_shapes, o_shapes, comp_tree, batch_tree, 0)
+    elif shape.kind == "prefill":
+        fn = make_prefill_step(model, mesh, shape)
+        lowered = fn.lower(p_shapes, batch_specs(cfg, shape))
+    else:  # decode
+        fn = make_decode_step(model, mesh, shape)
+        cache_tree = cache_specs(model, shape)
+        tok = batch_specs(cfg, shape)["tokens"]
+        lowered = fn.lower(p_shapes, cache_tree, tok, shape.seq_len - 1)
+    t_lower = time.time() - t0
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+    mesh_ctx.__exit__(None, None, None)
+
+    from repro.launch import hlo_walker as W
+    mem = H.memory_summary(compiled)
+    cost = H.cost_summary(compiled)
+    txt = compiled.as_text()
+    coll = H.collective_bytes(txt)          # flat (loop-body-once) counts
+    walked = W.analyze(txt)                 # loop-aware (true per-step)
+    print("memory_analysis:", json.dumps(mem, indent=1))
+    print("cost_analysis:", json.dumps(cost, indent=1))
+    print("collectives(per-device bytes):", json.dumps(coll, indent=1))
+    print("walked:", json.dumps(walked, indent=1))
+    if args.print_hlo:
+        print(txt[:20000])
+
+    result = {
+        "arch": args.arch,
+        "shape": args.shape,
+        "mesh": mesh_name,
+        "chips": int(np.prod(mesh.devices.shape)),
+        "compression": args.compression,
+        "n_params": n_params,
+        "param_bytes": tree_size_bytes(p_shapes),
+        "kind": shape.kind,
+        "seq_len": shape.seq_len,
+        "global_batch": shape.global_batch,
+        "sliding_window_substitution": window_sub,
+        "lower_seconds": t_lower,
+        "compile_seconds": t_compile,
+        "memory": mem,
+        "cost": cost,
+        "collectives": coll,
+        "walked": walked,
+    }
+    os.makedirs(args.out, exist_ok=True)
+    path = _result_path(args.out, args.arch, args.shape, mesh_name,
+                        args.compression)
+    with open(path, "w") as f:
+        json.dump(result, f, indent=1)
+    # persist the optimized HLO (gzipped) so analysis can be re-run
+    # offline without recompiling
+    import gzip
+    hlo_dir = os.path.join(args.out, "hlo")
+    os.makedirs(hlo_dir, exist_ok=True)
+    with gzip.open(os.path.join(
+            hlo_dir, os.path.basename(path)[:-5] + ".txt.gz"), "wt") as f:
+        f.write(txt)
+    log.info("wrote %s (lower %.1fs compile %.1fs)", path, t_lower,
+             t_compile)
+    return result
+
+
+def run_all(args):
+    """Every (arch x shape) x both meshes, each in a fresh subprocess
+    (compile-memory isolation)."""
+    import subprocess
+
+    from repro.configs import ASSIGNED_ARCHS, INPUT_SHAPES
+
+    failures = []
+    for arch in ASSIGNED_ARCHS:
+        for shape in INPUT_SHAPES:
+            for extra in ([], ["--multi-pod"]):
+                path = _result_path(args.out, arch, shape,
+                                    "pod2x16x16" if extra else "pod16x16",
+                                    args.compression)
+                if os.path.exists(path):
+                    print("skip (exists):", path)
+                    continue
+                cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                       "--arch", arch, "--shape", shape,
+                       "--out", args.out,
+                       "--compression", args.compression] + extra
+                print(">>>", " ".join(cmd), flush=True)
+                proc = subprocess.run(cmd, capture_output=True, text=True)
+                if proc.returncode != 0:
+                    failures.append((arch, shape, tuple(extra)))
+                    print("FAILED:", proc.stderr[-2000:], flush=True)
+    print(f"\n{'='*60}\nfailures: {len(failures)}")
+    for f in failures:
+        print("  ", f)
+    return failures
+
+
+def main(argv=None):
+    args = parse_args(argv)
+    if args.all:
+        failures = run_all(args)
+        sys.exit(1 if failures else 0)
+    if args.both_meshes:
+        for mp in (False, True):
+            args.multi_pod = mp
+            run_one(args)
+        return
+    run_one(args)
+
+
+if __name__ == "__main__":
+    main()

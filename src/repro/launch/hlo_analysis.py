@@ -1,0 +1,121 @@
+"""Parse compiled HLO for roofline inputs.
+
+``cost_analysis()`` gives FLOPs and bytes-accessed, but NOT collective
+traffic — we recover it by walking the optimized HLO text: build a symbol
+table of ``%name -> shape`` from def sites, then sum operand bytes of
+every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute.  Shapes in an SPMD module are PER-DEVICE.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, Tuple
+
+import numpy as np
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\([^)]*\)|\S+)\s+"
+                     r"([\w\-]+)")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def shape_bytes(shape_str: str) -> int:
+    """Bytes of one shape or a tuple of shapes, e.g. 'f32[4,8]{1,0}'."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            n = int(np.prod([int(d) for d in dims.split(",") if d]))
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-collective-kind operand bytes (per device) summed over the
+    module.  ``start`` variants counted once (the ``done`` is free)."""
+    symbols: Dict[str, str] = {}
+    per_kind: Dict[str, int] = defaultdict(int)
+    counts: Dict[str, int] = defaultdict(int)
+
+    lines = hlo_text.splitlines()
+    for ln in lines:
+        m = _DEF_RE.match(ln)
+        if m:
+            symbols[m.group(1)] = m.group(2)
+
+    for ln in lines:
+        m = _DEF_RE.match(ln)
+        if not m:
+            continue
+        op = m.group(3)
+        kind = None
+        for c in _COLLECTIVES:
+            if op == c or op == c + "-start":
+                kind = c
+                break
+        if kind is None:
+            continue
+        # operand names inside the call parens
+        call = ln.split(op, 1)[1]
+        ops = re.findall(r"%([\w.\-]+)", call)
+        b = 0
+        for name in ops:
+            if name in symbols:
+                b += shape_bytes(symbols[name])
+        if b == 0:
+            # fallback: use result shape
+            b = shape_bytes(m.group(2))
+        per_kind[kind] += b
+        counts[kind] += 1
+    out = dict(per_kind)
+    out["_counts"] = dict(counts)
+    return out
+
+
+def cost_summary(compiled) -> Dict[str, float]:
+    """Normalize cost_analysis() across backends."""
+    try:
+        ca = compiled.cost_analysis()
+    except Exception:
+        return {}
+    if isinstance(ca, list):
+        ca = ca[0] if ca else {}
+    out = {}
+    for k in ("flops", "bytes accessed", "transcendentals",
+              "utilization operand 0", "optimal_seconds"):
+        if k in ca:
+            out[k.replace(" ", "_")] = float(ca[k])
+    # include bytes accessed breakdown keys if present
+    for k, v in ca.items():
+        if k.startswith("bytes accessed"):
+            out[k.replace(" ", "_")] = float(v)
+    return out
+
+
+def memory_summary(compiled) -> Dict[str, float]:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        return {}
+    out = {}
+    for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "alias_size_in_bytes",
+                 "generated_code_size_in_bytes",
+                 "serialized_size_in_bytes"):
+        v = getattr(ma, attr, None)
+        if v is not None:
+            out[attr] = float(v)
+    if not out:
+        out["repr"] = str(ma)[:500]
+    return out

@@ -1,0 +1,274 @@
+"""Loop-aware HLO analysis.
+
+XLA's ``compiled.cost_analysis()`` counts a while-loop body ONCE, so a
+scan-over-61-layers model under-reports FLOPs and collective bytes by the
+trip count.  This walker parses the optimized HLO text into computations,
+counts per-computation dot/conv FLOPs and collective operand bytes, then
+walks the call graph from ENTRY multiplying while bodies by their trip
+counts (recovered from the loop-condition constant).
+
+All byte numbers are PER DEVICE (SPMD module).  Heuristics:
+  * trip count = the largest integer literal in the while condition
+    computation (standard XLA counted-loop shape);
+  * conv FLOPs = 2 * numel(result) * numel(kernel) / kernel_out_features
+    (output-feature dim taken as the kernel's last dim — XLA default
+    [...]io layouts), exact for the shapes this framework emits;
+  * ragged/dynamic trip counts are not produced by this codebase.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e5m2fnuz": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+# header params may contain tuple types and /*index=N*/ comments: be greedy
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->\s*.+\{\s*$")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"')
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*"
+                     r"((?:\([^)]*\))|(?:\w+\[[\d,]*\](?:\{[\d,]*\})?)|\w+)"
+                     r"\s+([\w\-]+)")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_dims(shape_str: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for m in _SHAPE_RE.finditer(shape_str):
+        dims = [int(d) for d in m.group(2).split(",") if d] \
+            if m.group(2) else []
+        out.append((m.group(1), dims))
+    return out
+
+
+def shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _shape_dims(shape_str):
+        if dt in _DTYPE_BYTES:
+            total += int(np.prod(dims)) * _DTYPE_BYTES[dt] if dims \
+                else _DTYPE_BYTES[dt]
+    return total
+
+
+def _numel(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _shape_dims(shape_str):
+        if dt in _DTYPE_BYTES:
+            total += int(np.prod(dims)) if dims else 1
+    return total
+
+
+@dataclass
+class Computation:
+    name: str
+    flops: float = 0.0
+    transcendental: float = 0.0
+    bytes_accessed: float = 0.0     # fusion-boundary operand+result bytes
+    collectives: Dict[str, float] = field(default_factory=dict)
+    collective_counts: Dict[str, int] = field(default_factory=dict)
+    calls: List[Tuple[str, float]] = field(default_factory=list)
+    # (body, cond, trip_count_from_backend_config_or_0)
+    whiles: List[Tuple[str, str, int]] = field(default_factory=list)
+    max_int_const: int = 0
+    fused: bool = False
+
+
+# top-level memory-moving ops counted toward bytes_accessed (everything
+# else is either inside a fusion — counted at the fusion boundary — or
+# layout-only: top-level reshape/transpose/broadcast/convert usually
+# lower to bitcasts or get fused, so counting them would overstate HBM
+# traffic by an order of magnitude)
+_BYTES_OPS = frozenset({
+    "fusion", "dot", "convolution", "copy", "copy-start",
+    "dynamic-slice", "dynamic-update-slice", "gather", "scatter",
+    "concatenate", "reduce", "sort", "select-and-scatter",
+    "reduce-window",
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute", "all-gather-start", "all-reduce-start",
+})
+
+
+def parse_hlo(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    symbols: Dict[str, str] = {}
+    entry_name = None
+
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        hdr = _COMP_HDR.match(line)
+        if hdr and ("->" in line) and line.endswith("{"):
+            cur = Computation(hdr.group(1))
+            cur.fused = "fused" in cur.name
+            comps[cur.name] = cur
+            if line.startswith("ENTRY"):
+                entry_name = cur.name
+            symbols = {}
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        if cur is None:
+            continue
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name, shape_str, op = m.group(1), m.group(2), m.group(3)
+        symbols[name] = shape_str
+
+        if op == "constant":
+            cm = re.search(r"constant\((\d+)\)", line)
+            if cm:
+                cur.max_int_const = max(cur.max_int_const, int(cm.group(1)))
+
+        if op == "dot":
+            lhs = re.search(r"dot\(\s*%?([\w.\-]+)", line)
+            cdim = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", line)
+            contract = 1
+            if lhs and cdim and lhs.group(1) in symbols:
+                dims = _shape_dims(symbols[lhs.group(1)])
+                if dims:
+                    _, ldims = dims[0]
+                    for ci in cdim.group(1).split(","):
+                        if ci and int(ci) < len(ldims):
+                            contract *= ldims[int(ci)]
+            cur.flops += 2.0 * _numel(shape_str) * contract
+        elif op == "convolution":
+            ops_m = re.findall(r"%([\w.\-]+)", line.split("convolution", 1)[1])
+            kernel_numel, kernel_out = 0, 1
+            if len(ops_m) >= 2 and ops_m[1] in symbols:
+                kdims = _shape_dims(symbols[ops_m[1]])
+                if kdims:
+                    _, kd = kdims[0]
+                    kernel_numel = int(np.prod(kd)) if kd else 1
+                    kernel_out = kd[-1] if kd else 1
+            if kernel_numel:
+                cur.flops += (2.0 * _numel(shape_str) * kernel_numel
+                              / max(kernel_out, 1))
+        elif op in ("exponential", "tanh", "log", "rsqrt", "sqrt",
+                    "power", "logistic", "sine", "cosine"):
+            cur.transcendental += _numel(shape_str)
+
+        if not cur.fused and op in _BYTES_OPS:
+            tail = line.split(op, 1)[1]
+            opnames = [n for n in re.findall(r"%([\w.\-]+)", tail)
+                       if n in symbols]
+            if op == "dynamic-slice":
+                # touches only the slice window: result read+write
+                b = 2 * shape_bytes(shape_str)
+            elif op == "dynamic-update-slice":
+                # reads+writes only the update window (operand 1)
+                upd = (shape_bytes(symbols[opnames[1]])
+                       if len(opnames) > 1 else shape_bytes(shape_str))
+                b = 2 * upd
+            else:
+                b = shape_bytes(shape_str)
+                for n in opnames:
+                    b += shape_bytes(symbols[n])
+            cur.bytes_accessed += b
+
+        kind = None
+        for c in _COLLECTIVES:
+            if op == c or op == c + "-start":
+                kind = c
+                break
+        if kind:
+            call = line.split(op, 1)[1]
+            opnames = re.findall(r"%([\w.\-]+)", call)
+            b = sum(shape_bytes(symbols[n]) for n in opnames
+                    if n in symbols)
+            if b == 0:
+                b = shape_bytes(shape_str)
+            cur.collectives[kind] = cur.collectives.get(kind, 0) + b
+            cur.collective_counts[kind] = \
+                cur.collective_counts.get(kind, 0) + 1
+
+        if op == "while":
+            bm = re.search(r"body=%?([\w.\-]+)", line)
+            cm2 = re.search(r"condition=%?([\w.\-]+)", line)
+            tm = _TRIP_RE.search(line)
+            if bm and cm2:
+                cur.whiles.append((bm.group(1), cm2.group(1),
+                                   int(tm.group(1)) if tm else 0))
+        for key in ("calls=", "to_apply="):
+            for cm3 in re.finditer(key + r"%?([\w.\-]+)", line):
+                cur.calls.append((cm3.group(1), 1.0))
+        for cm4 in re.finditer(r"branch_computations=\{([^}]*)\}", line):
+            for nm in re.findall(r"%?([\w.\-]+)", cm4.group(1)):
+                cur.calls.append((nm, 1.0))
+
+    comps["__entry__"] = comps.get(entry_name, Computation("__missing__"))
+    return comps
+
+
+@dataclass
+class WalkResult:
+    flops: float
+    transcendental: float
+    bytes_accessed: float
+    collectives: Dict[str, float]
+    collective_counts: Dict[str, float]
+
+
+def walk(comps: Dict[str, Computation]) -> WalkResult:
+    memo: Dict[str, WalkResult] = {}
+
+    def visit(name: str, stack=()) -> WalkResult:
+        if name in memo:
+            return memo[name]
+        if name in stack or name not in comps:
+            return WalkResult(0, 0, 0, {}, {})
+        c = comps[name]
+        flops = c.flops
+        trans = c.transcendental
+        bts = c.bytes_accessed
+        coll = dict(c.collectives)
+        counts = {k: float(v) for k, v in c.collective_counts.items()}
+
+        def add(r: WalkResult, mult: float):
+            nonlocal flops, trans, bts
+            flops += r.flops * mult
+            trans += r.transcendental * mult
+            bts += r.bytes_accessed * mult
+            for k, v in r.collectives.items():
+                coll[k] = coll.get(k, 0) + v * mult
+            for k, v in r.collective_counts.items():
+                counts[k] = counts.get(k, 0) + v * mult
+
+        for callee, mult in c.calls:
+            add(visit(callee, stack + (name,)), mult)
+        for body, cond, trip_cfg in c.whiles:
+            trip = trip_cfg or (max(comps[cond].max_int_const, 1)
+                                if cond in comps else 1)
+            add(visit(body, stack + (name,)), trip)
+            add(visit(cond, stack + (name,)), trip)
+        r = WalkResult(flops, trans, bts, coll, counts)
+        memo[name] = r
+        return r
+
+    entry = comps["__entry__"].name
+    return visit(entry)
+
+
+def analyze(hlo_text: str) -> Dict:
+    comps = parse_hlo(hlo_text)
+    r = walk(comps)
+    return {
+        "flops_per_device": r.flops,
+        "transcendentals_per_device": r.transcendental,
+        "bytes_accessed_per_device": r.bytes_accessed,
+        "collective_bytes_per_device": r.collectives,
+        "collective_counts": r.collective_counts,
+        "n_computations": len(comps) - 1,
+    }

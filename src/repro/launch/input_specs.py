@@ -1,0 +1,47 @@
+"""ShapeDtypeStruct stand-ins for every model input — the dry-run lowers
+from these, so no host memory is ever allocated for the production shapes.
+
+``input_specs(cfg, shape)`` returns the kwargs for the corresponding step:
+  train   -> {"tokens", "labels"[, "encoder_embeds"]}
+  prefill -> {"tokens"[, "encoder_embeds"]}
+  decode  -> {"tokens" (B,1), "pos" scalar} plus the KV cache built by
+             ``cache_specs``.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.models.model import Model
+
+SDS = jax.ShapeDtypeStruct
+
+
+def batch_specs(cfg: ModelConfig, shape: InputShape) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        out = {"tokens": SDS((B, S), jnp.int32),
+               "labels": SDS((B, S), jnp.int32)}
+    elif shape.kind == "prefill":
+        out = {"tokens": SDS((B, S), jnp.int32)}
+    elif shape.kind == "decode":
+        out = {"tokens": SDS((B, 1), jnp.int32)}
+    else:
+        raise ValueError(shape.kind)
+    if cfg.num_encoder_tokens and shape.kind in ("train", "prefill"):
+        out["encoder_embeds"] = SDS(
+            (B, cfg.num_encoder_tokens, cfg.encoder_dim), jnp.dtype(cfg.dtype))
+    return out
+
+
+def cache_specs(model: Model, shape: InputShape):
+    """Abstract KV-cache for decode shapes (cache length = seq_len)."""
+    return jax.eval_shape(
+        lambda: model.init_cache(shape.global_batch, shape.seq_len))
+
+
+def params_specs(model: Model):
+    return jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))

@@ -1,0 +1,200 @@
+"""Roofline analysis (deliverable g) over the dry-run JSON corpus.
+
+Hardware model: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link
+ICI.  Terms per (arch x shape x mesh), all from PER-DEVICE loop-aware HLO
+numbers (hlo_walker):
+
+    T_comp = flops_per_device / 197e12
+    T_mem  = bytes_accessed_per_device / 819e9
+    T_coll = sum(collective_bytes_per_device) / 50e9     (single-link,
+             conservative: multi-axis meshes have >1 usable link)
+
+MODEL_FLOPS (useful work):
+    train:   6 * N_active * tokens        (fwd 2x + bwd 4x)
+    prefill: 2 * N_active * tokens  + attention term
+    decode:  2 * N_active * batch   + KV-read attention term
+MODEL/HLO ratio flags remat/redundancy/dense-MoE-waste.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.roofline [--dir experiments/dryrun]
+        [--markdown]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from dataclasses import dataclass
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+
+def active_param_fraction(cfg) -> float:
+    """Fraction of parameters active per token (MoE routing)."""
+    if cfg.moe is None:
+        return 1.0
+    import jax
+
+    from repro.models import build_model
+    model = build_model(cfg)
+    shapes = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    import numpy as np
+    total = active = 0
+    flat, _ = jax.tree_util.tree_flatten_with_path(shapes)
+    for path, leaf in flat:
+        p = jax.tree_util.keystr(path, simple=True, separator="/")
+        n = int(np.prod(leaf.shape))
+        total += n
+        last = p.split("/")[-1]
+        if last in ("w_gate", "w_up", "w_down") and len(leaf.shape) >= 3 \
+                and "ffn" in p:
+            active += n * cfg.moe.top_k / cfg.moe.num_experts
+        else:
+            active += n
+    return active / max(total, 1)
+
+
+def model_flops(rec: Dict, cfg) -> float:
+    """Analytic useful FLOPs for the whole step (all devices)."""
+    n = rec["n_params"]
+    frac = active_param_fraction(cfg)
+    n_active = n * frac
+    B, S = rec["global_batch"], rec["seq_len"]
+    kind = rec["kind"]
+    if kind == "train":
+        return 6.0 * n_active * B * S
+    # fraction of layers that are attention (1.0 dense; 1/8 jamba; etc.)
+    attn_layers = cfg.n_layers * (
+        sum(1 for k in cfg.block_pattern if k in ("attn", "cross"))
+        / len(cfg.block_pattern)) if cfg.n_heads else 0.0
+    if kind == "prefill":
+        # causal attention: 2(qk)+2(av) matmuls * H*hd * S^2/2 per layer
+        attn = 2.0 * attn_layers * cfg.n_heads * cfg.head_dim * S * S * B
+        return 2.0 * n_active * B * S + attn
+    # decode: one token per sequence
+    attn = 0.0
+    if cfg.n_heads:
+        eff = min(S, cfg.sliding_window or S)
+        if rec.get("sliding_window_substitution"):
+            eff = min(S, 8192)
+        attn = 2.0 * 2.0 * attn_layers * cfg.n_kv_heads * cfg.head_dim \
+            * eff * B
+    return 2.0 * n_active * B + attn
+
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    compression: str
+    t_comp: float
+    t_mem: float
+    t_coll: float
+    dominant: str
+    model_flops: float
+    hlo_flops_total: float
+    useful_ratio: float
+    mem_gb: float
+    fits: bool
+    collective_detail: Dict[str, float]
+
+    @property
+    def bound(self) -> str:
+        return self.dominant
+
+
+def analyze_record(rec: Dict) -> Optional[Roofline]:
+    from repro.configs import get_arch
+    w = rec.get("walked") or {}
+    if "flops_per_device" not in w:
+        return None
+    cfg = get_arch(rec["arch"])
+    chips = rec["chips"]
+    t_comp = w["flops_per_device"] / PEAK_FLOPS
+    t_mem = w.get("bytes_accessed_per_device", 0.0) / HBM_BW
+    coll = w.get("collective_bytes_per_device", {})
+    coll_b = sum(v for k, v in coll.items() if not k.startswith("_"))
+    t_coll = coll_b / ICI_BW
+    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(rec, cfg)
+    hlo_total = w["flops_per_device"] * chips
+    mem = rec.get("memory", {})
+    hbm = (mem.get("argument_size_in_bytes", 0)
+           + mem.get("temp_size_in_bytes", 0)
+           + mem.get("output_size_in_bytes", 0)
+           - mem.get("alias_size_in_bytes", 0))
+    return Roofline(
+        arch=rec["arch"], shape=rec["shape"], mesh=rec["mesh"],
+        compression=rec.get("compression", "none"),
+        t_comp=t_comp, t_mem=t_mem, t_coll=t_coll, dominant=dominant,
+        model_flops=mf, hlo_flops_total=hlo_total,
+        useful_ratio=mf / hlo_total if hlo_total else 0.0,
+        mem_gb=hbm / 1e9, fits=hbm <= 16e9,
+        collective_detail={k: v for k, v in coll.items()
+                           if not k.startswith("_")},
+    )
+
+
+def load_all(dir_: str):
+    out = []
+    for path in sorted(glob.glob(os.path.join(dir_, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        r = analyze_record(rec)
+        if r:
+            out.append(r)
+    return out
+
+
+def fmt_s(x: float) -> str:
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.1f}ms"
+    return f"{x*1e6:.0f}us"
+
+
+def markdown_table(rows) -> str:
+    hdr = ("| arch | shape | mesh | comp | T_comp | T_mem | T_coll | "
+           "bound | useful | HBM/chip | fits |\n"
+           "|---|---|---|---|---|---|---|---|---|---|---|\n")
+    lines = []
+    for r in rows:
+        lines.append(
+            f"| {r.arch} | {r.shape} | {r.mesh} | {r.compression} | "
+            f"{fmt_s(r.t_comp)} | {fmt_s(r.t_mem)} | {fmt_s(r.t_coll)} | "
+            f"**{r.dominant}** | {r.useful_ratio:.2f} | "
+            f"{r.mem_gb:.1f}GB | {'y' if r.fits else 'N'} |")
+    return hdr + "\n".join(lines)
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("--dir", default="experiments/dryrun")
+    p.add_argument("--markdown", action="store_true")
+    p.add_argument("--json-out", default="")
+    args = p.parse_args(argv)
+    rows = load_all(args.dir)
+    if args.markdown:
+        print(markdown_table(rows))
+    else:
+        for r in rows:
+            print(f"{r.arch:22s} {r.shape:12s} {r.mesh:11s} "
+                  f"{r.compression:8s} comp={fmt_s(r.t_comp):>8s} "
+                  f"mem={fmt_s(r.t_mem):>8s} coll={fmt_s(r.t_coll):>8s} "
+                  f"bound={r.dominant:10s} useful={r.useful_ratio:5.2f} "
+                  f"hbm={r.mem_gb:8.1f}GB fits={'y' if r.fits else 'N'}")
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump([r.__dict__ for r in rows], f, indent=1)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

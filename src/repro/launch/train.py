@@ -1,0 +1,154 @@
+"""End-to-end training driver.
+
+    PYTHONPATH=src python -m repro.launch.train \
+        --arch llama3.2-1b --smoke --steps 50 --compression lgc_rar \
+        --data-shards 2 --model-shards 1 --batch 8 --seq 128
+
+Runs the three-phase LGC schedule (warm-up -> top-k+AE-online ->
+compressed) with per-phase jit specialization, periodic checkpointing and
+a compression-rate report at the end.  ``--smoke`` selects the reduced
+config of the same architecture family (CPU-tractable).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+
+def parse_args(argv=None):
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--arch", default="llama3.2-1b")
+    p.add_argument("--smoke", action="store_true",
+                   help="use the reduced (smoke) config variant")
+    p.add_argument("--steps", type=int, default=50)
+    p.add_argument("--batch", type=int, default=8)
+    p.add_argument("--seq", type=int, default=128)
+    p.add_argument("--compression", default="none",
+                   choices=["none", "sparse_gd", "dgc", "lgc_ps", "lgc_rar",
+                            "lgc_rar_q8"])
+    p.add_argument("--sparsity", type=float, default=0.001)
+    p.add_argument("--warmup-steps", type=int, default=10)
+    p.add_argument("--ae-train-steps", type=int, default=15)
+    p.add_argument("--optimizer", default="adamw",
+                   choices=["adamw", "sgd_momentum"])
+    p.add_argument("--lr", type=float, default=1e-3)
+    p.add_argument("--data-shards", type=int, default=1)
+    p.add_argument("--model-shards", type=int, default=1)
+    p.add_argument("--device-count", type=int, default=0,
+                   help="force this many host platform devices")
+    p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--checkpoint-dir", default="")
+    p.add_argument("--checkpoint-every", type=int, default=0)
+    p.add_argument("--log-every", type=int, default=10)
+    p.add_argument("--metrics-out", default="")
+    return p.parse_args(argv)
+
+
+def main(argv=None):
+    args = parse_args(argv)
+    needed = args.data_shards * args.model_shards
+    if args.device_count or needed > 1:
+        os.environ.setdefault(
+            "XLA_FLAGS",
+            f"--xla_force_host_platform_device_count="
+            f"{args.device_count or needed}")
+
+    import jax
+    import jax.tree_util as jtu
+    import numpy as np
+
+    from repro.checkpoint import load_checkpoint, save_checkpoint
+    from repro.configs import get_arch
+    from repro.configs.base import CompressionConfig, TrainConfig
+    from repro.core.phases import phase_for_step
+    from repro.core.rate import rate_report
+    from repro.data import synthetic_token_batches
+    from repro.launch.mesh import make_host_mesh
+    from repro.launch.steps import make_auto_train_step, make_lgc_train_step
+    from repro.models import build_model
+    from repro.utils import get_logger
+
+    log = get_logger("train")
+    cfg = get_arch(args.arch)
+    if args.smoke:
+        cfg = cfg.reduced()
+    model = build_model(cfg)
+    cc = CompressionConfig(method=args.compression, sparsity=args.sparsity,
+                           warmup_steps=args.warmup_steps,
+                           ae_train_steps=args.ae_train_steps)
+    tc = TrainConfig(optimizer=args.optimizer, learning_rate=args.lr,
+                     steps=args.steps, seed=args.seed, compression=cc)
+    mesh = make_host_mesh(args.data_shards, args.model_shards)
+    log.info("arch=%s params=%s devices=%d mesh=%s",
+             cfg.name, f"{model.param_count():,}", len(jax.devices()),
+             dict(zip(mesh.axis_names, mesh.devices.shape)))
+
+    data = synthetic_token_batches(
+        cfg.vocab_size, args.batch, args.seq, seed=args.seed,
+        encoder_tokens=cfg.num_encoder_tokens, encoder_dim=cfg.encoder_dim)
+    first = next(data)
+    sds = jtu.tree_map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+                       first)
+
+    rng = jax.random.PRNGKey(args.seed)
+    use_lgc = args.compression != "none"
+    history = []
+    if use_lgc:
+        lts = make_lgc_train_step(model, tc, mesh)
+        params, opt_state, comp_state = lts.init(rng, model, mesh)
+        report = rate_report(cc, lts.compressor.layout, lts.dp_size)
+        log.info("compression=%s CR(avg)=%.1fx bytes/node=%.0f",
+                 cc.method, report.compression_ratio, report.bytes_per_node)
+        fns = {}
+        batch = first
+        t0 = time.time()
+        for step in range(args.steps):
+            phase = phase_for_step(step, cc)
+            if phase not in fns:
+                fns[phase] = lts.make_step(phase, sds)
+            params, opt_state, comp_state, metrics = fns[phase](
+                params, opt_state, comp_state, batch, step)
+            batch = next(data)
+            if step % args.log_every == 0 or step == args.steps - 1:
+                loss = float(metrics["loss"])
+                history.append({"step": step, "phase": phase, "loss": loss})
+                log.info("step %4d  phase=%-10s loss=%.4f", step, phase,
+                         loss)
+            if args.checkpoint_every and args.checkpoint_dir \
+                    and step and step % args.checkpoint_every == 0:
+                save_checkpoint(os.path.join(args.checkpoint_dir,
+                                             "ckpt.npz"), params, step)
+        log.info("done in %.1fs", time.time() - t0)
+    else:
+        ats = make_auto_train_step(model, tc, mesh)
+        params, opt_state = ats.init(rng, model)
+        fn = ats.step_fn(sds)
+        batch = first
+        t0 = time.time()
+        for step in range(args.steps):
+            params, opt_state, metrics = fn(params, opt_state, batch, step)
+            batch = next(data)
+            if step % args.log_every == 0 or step == args.steps - 1:
+                loss = float(metrics["loss"])
+                history.append({"step": step, "phase": "dense",
+                                "loss": loss})
+                log.info("step %4d  loss=%.4f", step, loss)
+            if args.checkpoint_every and args.checkpoint_dir \
+                    and step and step % args.checkpoint_every == 0:
+                save_checkpoint(os.path.join(args.checkpoint_dir,
+                                             "ckpt.npz"), params, step)
+        log.info("done in %.1fs", time.time() - t0)
+
+    if args.checkpoint_dir:
+        save_checkpoint(os.path.join(args.checkpoint_dir, "ckpt.npz"),
+                        params, args.steps)
+    if args.metrics_out:
+        with open(args.metrics_out, "w") as f:
+            json.dump(history, f, indent=1)
+    return history
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""ConvNet5 — the paper's Section VI-E model: 5 conv layers, each followed
+by batch-norm + ReLU, global-average-pool, linear classifier.
+
+Used for the paper-faithful LGC experiments (gradient mutual-information
+analysis, sparsification-strategy ablation, compression-ratio accounting)
+at CPU-tractable scale.  Functional JAX, NCHW->NHWC layout.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.convnet5 import ConvNet5Config
+
+
+def init_convnet5(key, cfg: ConvNet5Config) -> Dict:
+    params = {}
+    c_in = cfg.in_channels
+    keys = jax.random.split(key, len(cfg.channels) + 1)
+    for i, c_out in enumerate(cfg.channels):
+        fan_in = 3 * 3 * c_in
+        params[f"conv{i}"] = {
+            "w": jax.random.normal(keys[i], (3, 3, c_in, c_out)) *
+                 np.sqrt(2.0 / fan_in),
+            "bn_scale": jnp.ones((c_out,)),
+            "bn_bias": jnp.zeros((c_out,)),
+        }
+        c_in = c_out
+    params["fc"] = {
+        "w": jax.random.normal(keys[-1], (c_in, cfg.num_classes)) *
+             np.sqrt(1.0 / c_in),
+        "b": jnp.zeros((cfg.num_classes,)),
+    }
+    return params
+
+
+def convnet5_forward(params, cfg: ConvNet5Config, images):
+    """images: (B, H, W, C) float32 -> logits (B, num_classes).
+
+    Batch-norm is instance-free (per-batch statistics, training mode) — the
+    paper trains ConvNet5 with BN in the usual training regime.
+    """
+    h = images
+    for i, _ in enumerate(cfg.channels):
+        p = params[f"conv{i}"]
+        h = jax.lax.conv_general_dilated(
+            h, p["w"], window_strides=(2, 2) if i % 2 else (1, 1),
+            padding="SAME", dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        mean = h.mean(axis=(0, 1, 2), keepdims=True)
+        var = h.var(axis=(0, 1, 2), keepdims=True)
+        h = (h - mean) * jax.lax.rsqrt(var + 1e-5)
+        h = h * p["bn_scale"] + p["bn_bias"]
+        h = jax.nn.relu(h)
+    h = h.mean(axis=(1, 2))                               # GAP
+    return h @ params["fc"]["w"] + params["fc"]["b"]
+
+
+def convnet5_loss(params, cfg: ConvNet5Config, batch):
+    """batch: {"images": (B,H,W,C), "labels": (B,) int32}."""
+    logits = convnet5_forward(params, cfg, batch["images"])
+    labels = batch["labels"]
+    logp = jax.nn.log_softmax(logits)
+    loss = -jnp.take_along_axis(logp, labels[:, None], axis=-1).mean()
+    acc = (jnp.argmax(logits, -1) == labels).astype(jnp.float32).mean()
+    return loss, {"loss": loss, "accuracy": acc}

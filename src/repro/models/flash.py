@@ -1,0 +1,188 @@
+"""Flash-style attention with a custom VJP (recompute-in-backward).
+
+The plain blockwise attention in layers.py is memory-safe in the FORWARD
+pass (online softmax, O(S*ck) live), but jax's scan VJP stacks each KV
+chunk's probability matrix as a residual, so the backward holds
+O(nq*nk*cq*ck) — several GB per layer at train_4k.  This module
+implements the standard FlashAttention backward: the forward stores only
+(o, lse); the backward recomputes p chunk-by-chunk and accumulates
+dq/dk/dv, so live memory stays O(cq*ck) regardless of sequence length.
+
+Used by layers.attention_fwd for self-attention when cfg allows; the
+fwd-only paths (prefill) keep the plain version (no backward needed).
+Hypothesis -> measurement log in EXPERIMENTS.md §Perf.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _chunks(q_len: int, kv_len: int):
+    cq = min(q_len, 512)
+    ck = min(kv_len, 1024)
+    while q_len % cq:
+        cq //= 2
+    while kv_len % ck:
+        ck //= 2
+    return max(cq, 1), max(ck, 1)
+
+
+def _mask(qp, kp, causal, window, cq, ck):
+    m = jnp.ones((cq, ck), bool)
+    if causal:
+        m &= qp[:, None] >= kp[None, :]
+    if window:
+        m &= qp[:, None] - kp[None, :] < window
+    return m
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def flash_attention(q, k, v, causal: bool = True, window: int = 0):
+    """q: (B,S,H,D); k,v: (B,S,KH,D/Dv).  Positions are arange(S) (self-
+    attention over a contiguous segment).  Returns (B,S,H,Dv)."""
+    o, _ = _flash_fwd_impl(q, k, v, causal, window)
+    return o
+
+
+def _flash_fwd_impl(q, k, v, causal, window):
+    B, Sq, H, D = q.shape
+    Sk, KH = k.shape[1], k.shape[2]
+    Dv = v.shape[-1]
+    G = H // KH
+    scale = 1.0 / np.sqrt(D)
+    cq, ck = _chunks(Sq, Sk)
+    nq, nk = Sq // cq, Sk // ck
+    qc = q.reshape(B, nq, cq, KH, G, D).transpose(1, 0, 2, 3, 4, 5)
+    kc = k.reshape(B, nk, ck, KH, D).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, nk, ck, KH, Dv).transpose(1, 0, 2, 3, 4)
+    qpos = jnp.arange(Sq).reshape(nq, cq)
+    kpos = jnp.arange(Sk).reshape(nk, ck)
+
+    def q_block(_, qi):
+        qb, qp = qi
+
+        def kv_block(acc, ki):
+            kb, vb, kp = ki
+            m, l, o = acc
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", qb, kb,
+                           preferred_element_type=jnp.float32) * scale
+            msk = _mask(qp, kp, causal, window, cq, ck)
+            s = jnp.where(msk[None, None, None], s, -jnp.inf)
+            m_new = jnp.maximum(m, s.max(-1))
+            m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+            p = jnp.where(msk[None, None, None],
+                          jnp.exp(s - m_safe[..., None]), 0.0)
+            corr = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+            l_new = l * corr + p.sum(-1)
+            o_new = o * corr[..., None] + jnp.einsum(
+                "bhgqk,bkhd->bhgqd", p, vb.astype(jnp.float32))
+            return (m_new, l_new, o_new), None
+
+        m0 = jnp.full((B, KH, G, cq), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((B, KH, G, cq), jnp.float32)
+        o0 = jnp.zeros((B, KH, G, cq, Dv), jnp.float32)
+        (m, l, o), _ = jax.lax.scan(kv_block, (m0, l0, o0), (kc, vc, kpos))
+        l_safe = jnp.maximum(l, 1e-20)
+        o = o / l_safe[..., None]
+        lse = m + jnp.log(l_safe)                     # (B,KH,G,cq)
+        o_out = o.transpose(0, 3, 1, 2, 4).reshape(B, cq, H, Dv)
+        return None, (o_out.astype(q.dtype), lse)
+
+    _, (oc, lsec) = jax.lax.scan(q_block, None, (qc, qpos))
+    o = oc.transpose(1, 0, 2, 3, 4).reshape(B, Sq, H, Dv)
+    lse = lsec  # (nq, B, KH, G, cq)
+    return o, lse
+
+
+def _flash_fwd(q, k, v, causal, window):
+    o, lse = _flash_fwd_impl(q, k, v, causal, window)
+    return o, (q, k, v, o, lse)
+
+
+def _flash_bwd(causal, window, res, do):
+    q, k, v, o, lse = res
+    B, Sq, H, D = q.shape
+    Sk, KH = k.shape[1], k.shape[2]
+    Dv = v.shape[-1]
+    G = H // KH
+    scale = 1.0 / np.sqrt(D)
+    cq, ck = _chunks(Sq, Sk)
+    nq, nk = Sq // cq, Sk // ck
+
+    qc = q.reshape(B, nq, cq, KH, G, D).transpose(1, 0, 2, 3, 4, 5)
+    kc = k.reshape(B, nk, ck, KH, D).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, nk, ck, KH, Dv).transpose(1, 0, 2, 3, 4)
+    doc = do.reshape(B, nq, cq, KH, G, Dv).transpose(1, 0, 2, 3, 4, 5)
+    oc = o.reshape(B, nq, cq, KH, G, Dv).transpose(1, 0, 2, 3, 4, 5)
+    qpos = jnp.arange(Sq).reshape(nq, cq)
+    kpos = jnp.arange(Sk).reshape(nk, ck)
+
+    # D_i = rowsum(do * o)  (f32)
+    Drow = jnp.einsum("nbqhgd,nbqhgd->nbhgq", doc.astype(jnp.float32),
+                      oc.astype(jnp.float32))          # (nq,B,KH,G,cq)
+
+    def kv_outer(_, ki):
+        kb, vb, kp = ki                                # one KV chunk
+
+        def q_inner(acc, qi):
+            dk, dv = acc
+            qb, dob, lseb, Db, qp = qi
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", qb, kb,
+                           preferred_element_type=jnp.float32) * scale
+            msk = _mask(qp, kp, causal, window, cq, ck)
+            p = jnp.where(msk[None, None, None],
+                          jnp.exp(s - lseb[..., None]), 0.0)
+            dob32 = dob.astype(jnp.float32)
+            dv_c = jnp.einsum("bhgqk,bqhgd->bkhd", p, dob32)
+            dp = jnp.einsum("bqhgd,bkhd->bhgqk", dob32,
+                            vb.astype(jnp.float32))
+            ds = p * (dp - Db[..., None]) * scale
+            dk_c = jnp.einsum("bhgqk,bqhgd->bkhd", ds,
+                              qb.astype(jnp.float32))
+            return (dk + dk_c, dv + dv_c), None
+
+        dk0 = jnp.zeros((B, ck, KH, D), jnp.float32)
+        dv0 = jnp.zeros((B, ck, KH, Dv), jnp.float32)
+        (dk, dv), _ = jax.lax.scan(
+            q_inner, (dk0, dv0),
+            (qc, doc, lse_all, Drow, qpos))
+        return None, (dk, dv)
+
+    lse_all = lse                                      # (nq,B,KH,G,cq)
+    _, (dkc, dvc) = jax.lax.scan(kv_outer, None, (kc, vc, kpos))
+    dk = dkc.transpose(1, 0, 2, 3, 4).reshape(B, Sk, KH, D).astype(k.dtype)
+    dv = dvc.transpose(1, 0, 2, 3, 4).reshape(B, Sk, KH, Dv).astype(v.dtype)
+
+    def q_outer(_, qi):
+        qb, dob, lseb, Db, qp = qi
+
+        def kv_inner(dq, ki):
+            kb, vb, kp = ki
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", qb, kb,
+                           preferred_element_type=jnp.float32) * scale
+            msk = _mask(qp, kp, causal, window, cq, ck)
+            p = jnp.where(msk[None, None, None],
+                          jnp.exp(s - lseb[..., None]), 0.0)
+            dp = jnp.einsum("bqhgd,bkhd->bhgqk",
+                            dob.astype(jnp.float32),
+                            vb.astype(jnp.float32))
+            ds = p * (dp - Db[..., None]) * scale
+            dq_c = jnp.einsum("bhgqk,bkhd->bqhgd", ds,
+                              kb.astype(jnp.float32))
+            return dq + dq_c, None
+
+        dq0 = jnp.zeros((B, cq, KH, G, D), jnp.float32)
+        dq, _ = jax.lax.scan(kv_inner, dq0, (kc, vc, kpos))
+        return None, dq
+
+    _, dqc = jax.lax.scan(q_outer, None, (qc, doc, lse_all, Drow, qpos))
+    dq = dqc.transpose(1, 0, 2, 3, 4, 5).reshape(B, Sq, H, D).astype(
+        q.dtype)
+    return dq, dk, dv
+
+
+flash_attention.defvjp(_flash_fwd, _flash_bwd)

@@ -1,0 +1,193 @@
+"""Mamba2 SSD (state-space duality) block [arXiv:2405.21060].
+
+Chunked SSD algorithm: the sequence is split into chunks of size Q; the
+intra-chunk part is a (masked) quadratic attention-like matmul (MXU
+friendly), and the inter-chunk part is a first-order recurrence over chunk
+states carried by ``lax.scan``.  Decode is the O(1)-state recurrent update,
+which is what makes the ``long_500k`` shape natural for SSM/hybrid archs.
+
+Head layout follows the paper: d_inner = expand*d_model split into H heads
+of size P; B/C are shared across heads within a (single) group; A is a
+per-head scalar decay, dt a per-head per-token step size.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, SSMConfig
+from repro.models.layers import init_rmsnorm, init_linear, linear, rmsnorm
+
+
+def _dims(cfg: ModelConfig):
+    s: SSMConfig = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    n_heads = d_inner // s.head_dim
+    return s, d_inner, n_heads
+
+
+def init_mamba(key, cfg: ModelConfig, dtype):
+    s, d_inner, H = _dims(cfg)
+    N = s.d_state
+    ks = jax.random.split(key, 4)
+    # in_proj -> [z (d_inner), x (d_inner), B (N), C (N), dt (H)]
+    d_in_proj = 2 * d_inner + 2 * N + H
+    conv_dim = d_inner + 2 * N
+    A = jnp.exp(jax.random.uniform(ks[2], (H,), jnp.float32,
+                                   np.log(1.0), np.log(16.0)))
+    return {
+        "norm": init_rmsnorm(cfg.d_model, dtype),
+        "in_proj": init_linear(ks[0], cfg.d_model, d_in_proj, dtype),
+        "conv_w": (jax.random.normal(ks[1], (s.d_conv, conv_dim), jnp.float32)
+                   * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.log(A),                         # (H,) f32
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),            # skip connection
+        "out_norm": init_rmsnorm(d_inner, dtype),
+        "out_proj": init_linear(ks[3], d_inner, cfg.d_model, dtype),
+    }
+
+
+def _split_in_proj(cfg, zxbcdt):
+    s, d_inner, H = _dims(cfg)
+    N = s.d_state
+    z, xBC, dt = jnp.split(zxbcdt, [d_inner, 2 * d_inner + 2 * N], axis=-1)
+    return z, xBC, dt
+
+
+def _causal_conv(w, b, xBC, conv_state=None):
+    """Depthwise causal conv1d.  xBC: (B,S,C); w: (K,C).
+
+    If conv_state (B,K-1,C) is given, it is prepended (decode/streaming) and
+    the updated state is returned.
+    """
+    K = w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros_like(xBC[:, : K - 1])
+    else:
+        pad = conv_state
+    xp = jnp.concatenate([pad, xBC], axis=1)                 # (B, S+K-1, C)
+    out = sum(xp[:, i : xp.shape[1] - (K - 1 - i)] * w[i] for i in range(K))
+    out = jax.nn.silu(out + b)
+    new_state = xp[:, -(K - 1):]
+    return out, new_state
+
+
+def ssd_chunked(x, dt, A, B, C, D, chunk: int):
+    """Chunked SSD scan.
+
+    x:  (b, S, H, P)   inputs per head
+    dt: (b, S, H)      softplus-ed step sizes
+    A:  (H,)           negative decay rates (A = -exp(A_log))
+    B:  (b, S, N)      input projections (single group, shared across heads)
+    C:  (b, S, N)      output projections
+    D:  (H,)           skip
+    Returns y: (b, S, H, P).
+    """
+    b, S, H, P = x.shape
+    N = B.shape[-1]
+    Q = min(chunk, S)
+    while S % Q:
+        Q //= 2
+    nC = S // Q
+
+    # reshape into chunks; scan over them so only ONE chunk's quadratic
+    # (Q,Q,H) tensor is live at a time (peak activation O(b·Q²·H), not
+    # O(b·S·Q·H) — the difference between ~0.5 GB and ~34 GB for jamba
+    # at train_4k).
+    xc = x.reshape(b, nC, Q, H, P).transpose(1, 0, 2, 3, 4)
+    dtc = dt.reshape(b, nC, Q, H).transpose(1, 0, 2, 3)
+    Bc = B.reshape(b, nC, Q, N).transpose(1, 0, 2, 3)
+    Cc = C.reshape(b, nC, Q, N).transpose(1, 0, 2, 3)
+    causal = jnp.tril(jnp.ones((Q, Q), bool))
+
+    def chunk_step(state, inp):
+        xq, dtq, Bq, Cq = inp          # (b,Q,H,P) (b,Q,H) (b,Q,N) (b,Q,N)
+        dA = dtq * A[None, None, :]                       # (b,Q,H), negative
+        dA_cum = jnp.cumsum(dA, axis=1)
+        # intra-chunk: L[i,j] = exp(dA_cum[i]-dA_cum[j]), i>=j.
+        # Mask BEFORE the exp: for i<j the difference is positive and
+        # exp overflows; where(mask, inf, 0) still propagates NaN through
+        # the VJP.  exp(-inf)=0 with zero gradient is exact and safe.
+        seg = dA_cum[:, :, None, :] - dA_cum[:, None, :, :]   # (b,Q,Q,H)
+        seg = jnp.where(causal[None, :, :, None], seg, -jnp.inf)
+        L = jnp.exp(seg)
+        CB = jnp.einsum("bqn,bkn->bqk", Cq.astype(jnp.float32),
+                        Bq.astype(jnp.float32))           # (b,Q,Q)
+        att = CB[..., None] * L                           # (b,Q,Q,H)
+        xdt = xq.astype(jnp.float32) * dtq[..., None]
+        y_diag = jnp.einsum("bqkh,bkhp->bqhp", att, xdt)
+        # inter-chunk: y_off = C_i · exp(dA_cum[i]) · state_prev
+        state_decay = jnp.exp(dA_cum)                     # (b,Q,H)
+        y_off = jnp.einsum("bqn,bqh,bhnp->bqhp",
+                           Cq.astype(jnp.float32), state_decay, state)
+        # state update
+        decay_to_end = jnp.exp(dA_cum[:, -1:, :] - dA_cum)    # (b,Q,H)
+        st = jnp.einsum("bqn,bqh,bqhp->bhnp", Bq.astype(jnp.float32),
+                        decay_to_end * dtq, xq.astype(jnp.float32))
+        chunk_decay = jnp.exp(dA_cum[:, -1, :])           # (b,H)
+        new_state = state * chunk_decay[..., None, None] + st
+        return new_state, (y_diag + y_off).astype(x.dtype)
+
+    init = jnp.zeros((b, H, N, P), jnp.float32)
+    _, yc = jax.lax.scan(chunk_step, init, (xc, dtc, Bc, Cc))
+    y = yc.transpose(1, 0, 2, 3, 4).reshape(b, S, H, P).astype(jnp.float32)
+    y = y + x.astype(jnp.float32) * D[None, None, :, None]
+    return y.astype(x.dtype)
+
+
+def mamba_fwd(p, cfg: ModelConfig, x):
+    """Training/prefill forward. x: (B,S,D) -> (B,S,D) residual added."""
+    s, d_inner, H = _dims(cfg)
+    N, P = s.d_state, s.head_dim
+    b, S, _ = x.shape
+    h = rmsnorm(p["norm"], x, cfg.rms_norm_eps)
+    z, xBC, dt = _split_in_proj(cfg, linear(p["in_proj"], h))
+    xBC, _ = _causal_conv(p["conv_w"], p["conv_b"], xBC)
+    xs, B, C = jnp.split(xBC, [d_inner, d_inner + N], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    y = ssd_chunked(xs.reshape(b, S, H, P), dt, A, B, C, p["D"],
+                    s.chunk_size)
+    y = y.reshape(b, S, d_inner) * jax.nn.silu(z)
+    y = rmsnorm(p["out_norm"], y, cfg.rms_norm_eps)
+    return x + linear(p["out_proj"], y)
+
+
+def mamba_decode(p, cfg: ModelConfig, x, cache, pos):
+    """Single-token recurrent update.  cache: {"conv": (B,K-1,convdim),
+    "ssm": (B,H,N,P)}.  O(1) in sequence length."""
+    s, d_inner, H = _dims(cfg)
+    N, P = s.d_state, s.head_dim
+    b = x.shape[0]
+    h = rmsnorm(p["norm"], x, cfg.rms_norm_eps)
+    z, xBC, dt = _split_in_proj(cfg, linear(p["in_proj"], h))   # (B,1,*)
+    xBC, conv_state = _causal_conv(p["conv_w"], p["conv_b"], xBC,
+                                   cache["conv"])
+    xs, B, C = jnp.split(xBC, [d_inner, d_inner + N], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,1,H)
+    A = -jnp.exp(p["A_log"])
+    dA = jnp.exp(dt[:, 0] * A[None, :])                          # (B,H)
+    xh = xs.reshape(b, H, P).astype(jnp.float32)
+    dBx = jnp.einsum("bn,bh,bhp->bhnp", B[:, 0].astype(jnp.float32),
+                     dt[:, 0], xh)
+    ssm = cache["ssm"] * dA[..., None, None] + dBx               # (B,H,N,P)
+    y = jnp.einsum("bn,bhnp->bhp", C[:, 0].astype(jnp.float32), ssm)
+    y = y + xh * p["D"][None, :, None]
+    y = y.reshape(b, 1, d_inner).astype(x.dtype) * jax.nn.silu(z)
+    y = rmsnorm(p["out_norm"], y, cfg.rms_norm_eps)
+    new_cache = {"conv": conv_state, "ssm": ssm}
+    return x + linear(p["out_proj"], y), new_cache
+
+
+def init_mamba_cache(cfg: ModelConfig, batch, dtype):
+    s, d_inner, H = _dims(cfg)
+    conv_dim = d_inner + 2 * s.d_state
+    return {
+        "conv": jnp.zeros((batch, s.d_conv - 1, conv_dim), dtype),
+        "ssm": jnp.zeros((batch, H, s.d_state, s.head_dim), jnp.float32),
+    }

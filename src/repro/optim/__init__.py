@@ -1,0 +1,8 @@
+from repro.optim.optimizers import (
+    Optimizer,
+    adamw,
+    build_optimizer,
+    cosine_schedule,
+    sgd_momentum,
+    step_schedule,
+)

@@ -1,0 +1,134 @@
+"""Optimizers and LR schedules (functional, optax-style but dependency-free).
+
+The paper trains with momentum SGD (+weight decay); AdamW is provided for
+the transformer configs.  All states are PyTrees mirroring params so they
+shard exactly like params under the same PartitionSpecs.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+
+Schedule = Callable[[jnp.ndarray], jnp.ndarray]
+
+
+def cosine_schedule(base_lr: float, total_steps: int,
+                    warmup: int = 0) -> Schedule:
+    def fn(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * jnp.minimum(step / jnp.maximum(warmup, 1), 1.0)
+        t = jnp.clip((step - warmup) / max(total_steps - warmup, 1), 0.0, 1.0)
+        cos = base_lr * 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+        return jnp.where(step < warmup, warm, cos)
+    return fn
+
+
+def step_schedule(base_lr: float, decay_every: int,
+                  factor: float = 0.1) -> Schedule:
+    """The paper's ImageNet schedule: decay by 10 every N steps/epochs."""
+    def fn(step):
+        k = jnp.floor(jnp.asarray(step, jnp.float32) / decay_every)
+        return base_lr * (factor ** k)
+    return fn
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any, jnp.ndarray], Tuple[Any, Any]]
+    # update(grads, opt_state, params, step) -> (new_params, new_opt_state)
+
+
+def _global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in jax.tree_util.tree_leaves(tree)))
+
+
+def _maybe_clip(grads, clip_norm: float):
+    if not clip_norm:
+        return grads
+    g = _global_norm(grads)
+    scale = jnp.minimum(1.0, clip_norm / jnp.maximum(g, 1e-12))
+    return jax.tree_util.tree_map(lambda x: x * scale, grads)
+
+
+def sgd_momentum(lr: Schedule, momentum: float = 0.9,
+                 weight_decay: float = 0.0, nesterov: bool = False,
+                 clip_norm: float = 0.0) -> Optimizer:
+    def init(params):
+        return {"m": jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)}
+
+    def update(grads, state, params, step):
+        grads = _maybe_clip(grads, clip_norm)
+
+        def upd(g, m, p):
+            g32 = g.astype(jnp.float32)
+            if weight_decay:
+                g32 = g32 + weight_decay * p.astype(jnp.float32)
+            m_new = momentum * m + g32
+            d = g32 + momentum * m_new if nesterov else m_new
+            return m_new, (p.astype(jnp.float32)
+                           - lr(step) * d).astype(p.dtype)
+
+        out = jax.tree_util.tree_map(upd, grads, state["m"], params)
+        m_new = jax.tree_util.tree_map(lambda t: t[0], out,
+                                       is_leaf=lambda t: isinstance(t, tuple))
+        p_new = jax.tree_util.tree_map(lambda t: t[1], out,
+                                       is_leaf=lambda t: isinstance(t, tuple))
+        return p_new, {"m": m_new}
+
+    return Optimizer(init, update)
+
+
+def adamw(lr: Schedule, b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8, weight_decay: float = 0.0,
+          clip_norm: float = 0.0) -> Optimizer:
+    def init(params):
+        z = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"m": jax.tree_util.tree_map(z, params),
+                "v": jax.tree_util.tree_map(z, params)}
+
+    def update(grads, state, params, step):
+        grads = _maybe_clip(grads, clip_norm)
+        t = jnp.asarray(step, jnp.float32) + 1.0
+        c1 = 1.0 - b1 ** t
+        c2 = 1.0 - b2 ** t
+
+        def upd(g, m, v, p):
+            g32 = g.astype(jnp.float32)
+            m_new = b1 * m + (1 - b1) * g32
+            v_new = b2 * v + (1 - b2) * g32 * g32
+            mhat = m_new / c1
+            vhat = v_new / c2
+            d = mhat / (jnp.sqrt(vhat) + eps)
+            if weight_decay:
+                d = d + weight_decay * p.astype(jnp.float32)
+            return m_new, v_new, (p.astype(jnp.float32)
+                                  - lr(step) * d).astype(p.dtype)
+
+        out = jax.tree_util.tree_map(upd, grads, state["m"], state["v"],
+                                     params)
+        pick = lambda i: jax.tree_util.tree_map(
+            lambda t: t[i], out, is_leaf=lambda t: isinstance(t, tuple))
+        return pick(2), {"m": pick(0), "v": pick(1)}
+
+    return Optimizer(init, update)
+
+
+def build_optimizer(tc: TrainConfig, total_steps: int = 0) -> Optimizer:
+    steps = total_steps or tc.steps
+    lr = cosine_schedule(tc.learning_rate, steps, warmup=min(100, steps // 10))
+    if tc.optimizer == "sgd_momentum":
+        return sgd_momentum(lr, tc.momentum, tc.weight_decay,
+                            clip_norm=tc.grad_clip_norm)
+    if tc.optimizer == "adamw":
+        return adamw(lr, tc.adam_b1, tc.adam_b2,
+                     weight_decay=tc.weight_decay,
+                     clip_norm=tc.grad_clip_norm)
+    raise ValueError(tc.optimizer)

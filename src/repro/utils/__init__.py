@@ -1,0 +1,8 @@
+from repro.utils.tree import (
+    tree_size_bytes,
+    tree_count_params,
+    tree_flatten_vector,
+    tree_unflatten_vector,
+    tree_zeros_like,
+)
+from repro.utils.logging import get_logger

@@ -1,0 +1,117 @@
+"""Per-architecture smoke tests (assignment deliverable f).
+
+Each assigned architecture instantiates its REDUCED family variant
+(2 superblocks, d_model<=512, <=4 experts) and runs one forward/train step
+on CPU, asserting output shapes and finiteness.  Decode-capable archs also
+run one prefill+decode round.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ASSIGNED_ARCHS, get_arch
+from repro.models import build_model
+
+B, S = 2, 64
+
+
+def _batch(cfg, rng):
+    toks = jax.random.randint(rng, (B, S), 0, cfg.vocab_size)
+    batch = {"tokens": toks, "labels": toks}
+    if cfg.num_encoder_tokens:
+        batch["encoder_embeds"] = jax.random.normal(
+            jax.random.PRNGKey(7),
+            (B, cfg.num_encoder_tokens, cfg.encoder_dim), jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_train_step_smoke(arch):
+    cfg = get_arch(arch).reduced()
+    assert cfg.d_model <= 512 and cfg.n_blocks <= 2 * len(cfg.block_pattern)
+    if cfg.moe:
+        assert cfg.moe.num_experts <= 4
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = _batch(cfg, jax.random.PRNGKey(1))
+
+    loss, metrics = jax.jit(model.loss)(params, batch)
+    assert loss.shape == ()
+    assert bool(jnp.isfinite(loss)), arch
+    assert float(loss) > 0
+
+    # one SGD step moves the loss (some lr in a small sweep must descend)
+    grads = jax.jit(jax.grad(lambda p: model.loss(p, batch)[0]))(params)
+    for leaf in jax.tree_util.tree_leaves(grads):
+        assert bool(jnp.all(jnp.isfinite(leaf))), arch
+    descended = False
+    for lr in (0.5, 0.1, 0.02):
+        params2 = jax.tree_util.tree_map(lambda p, g: p - lr * g, params,
+                                         grads)
+        loss2, _ = jax.jit(model.loss)(params2, batch)
+        if float(loss2) < float(loss):
+            descended = True
+            break
+    assert descended, f"{arch}: no SGD step descended"
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_prefill_decode_smoke(arch):
+    cfg = get_arch(arch).reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = _batch(cfg, jax.random.PRNGKey(1))
+    del batch["labels"]
+    logits, cache = jax.jit(
+        lambda p, b: model.prefill(p, b, cache_len=S + 4))(params, batch)
+    assert logits.shape == (B, 1, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits))), arch
+    nxt = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
+    logits2, cache2 = jax.jit(model.decode_step)(params, cache, nxt, S)
+    assert logits2.shape == (B, 1, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits2))), arch
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_exact_assigned_geometry(arch):
+    """The FULL configs carry the exact assigned geometry (exercised via
+    dry-run only; here we check the numbers)."""
+    cfg = get_arch(arch)
+    expect = {
+        "phi3-medium-14b": (40, 5120, 40, 10, 17920, 100352),
+        "deepseek-v3-671b": (61, 7168, 128, 128, 18432, 129280),
+        "musicgen-medium": (48, 1536, 24, 24, 6144, 2048),
+        "jamba-v0.1-52b": (32, 4096, 32, 8, 14336, 65536),
+        "arctic-480b": (35, 7168, 56, 8, 4864, 32000),
+        "llama3.2-1b": (16, 2048, 32, 8, 8192, 128256),
+        "llama-3.2-vision-90b": (100, 8192, 64, 8, 28672, 128256),
+        "mamba2-130m": (24, 768, 0, 0, 0, 50280),
+        "granite-8b": (36, 4096, 32, 8, 14336, 49152),
+        "qwen2-1.5b": (28, 1536, 12, 2, 8960, 151936),
+    }[arch]
+    got = (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+           cfg.d_ff, cfg.vocab_size)
+    assert got == expect, (arch, got, expect)
+    if arch == "deepseek-v3-671b":
+        assert cfg.moe.num_experts == 256 and cfg.moe.top_k == 8
+        assert cfg.mla is not None and cfg.mtp_depth == 1
+        assert cfg.moe.d_ff_expert == 2048
+    if arch == "jamba-v0.1-52b":
+        assert cfg.moe.num_experts == 16 and cfg.moe.top_k == 2
+        # 1:7 attention:mamba interleave
+        assert cfg.block_pattern.count("attn") == 1
+        assert cfg.block_pattern.count("mamba") == 7
+    if arch == "arctic-480b":
+        assert cfg.moe.num_experts == 128 and cfg.moe.top_k == 2
+        assert cfg.moe.dense_residual_d_ff > 0
+    if arch == "mamba2-130m":
+        assert cfg.ssm.d_state == 128
+    if arch == "qwen2-1.5b":
+        assert cfg.qkv_bias
+
+
+def test_all_ten_archs_registered():
+    assert len(ASSIGNED_ARCHS) == 10
+    families = {get_arch(a).family for a in ASSIGNED_ARCHS}
+    assert families == {"dense", "moe", "audio", "hybrid", "vlm", "ssm"}

@@ -1,0 +1,96 @@
+"""LGC autoencoder (paper Tables I/II, Section IV) structural tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import autoencoder as AE
+
+
+@pytest.mark.parametrize("L", [64, 256, 4096])
+def test_encoder_geometry(L):
+    """Encoder: (L,) -> (L/16, 4) per Table I."""
+    ae = AE.init_lgc_autoencoder(jax.random.PRNGKey(0))
+    g = jax.random.normal(jax.random.PRNGKey(1), (L,))
+    z = AE.lgc_encode(ae, g)
+    assert z.shape == (1, L // AE.ENC_FACTOR, AE.BOTTLENECK_CH)
+
+
+@pytest.mark.parametrize("L", [64, 512])
+def test_rar_decoder_inverts_shape(L):
+    ae = AE.init_lgc_autoencoder(jax.random.PRNGKey(0))
+    g = jax.random.normal(jax.random.PRNGKey(1), (2, L))
+    z = AE.lgc_encode(ae, g)
+    rec = AE.lgc_decode_rar(ae, z.mean(0, keepdims=True))
+    assert rec.shape == (1, L)
+
+
+def test_ps_decoders_are_per_node():
+    K, L = 3, 256
+    ae = AE.init_lgc_autoencoder(jax.random.PRNGKey(0), num_decoders=K,
+                                 ps_innovation=True)
+    g = jax.random.normal(jax.random.PRNGKey(1), (K, L))
+    inno = jnp.zeros((K, L)).at[:, :4].set(1.0)
+    z = AE.lgc_encode(ae, g)
+    rec = AE.lgc_decode_ps(ae, z[0], inno)
+    assert rec.shape == (K, L)
+    # decoders have distinct params -> distinct outputs for same input
+    rec_same = AE.lgc_decode_ps(ae, z[0],
+                                jnp.broadcast_to(inno[0], (K, L)))
+    assert not np.allclose(np.asarray(rec_same[0]), np.asarray(rec_same[1]))
+
+
+def test_innovation_channel_affects_ps_decode():
+    K, L = 2, 256
+    ae = AE.init_lgc_autoencoder(jax.random.PRNGKey(0), num_decoders=K,
+                                 ps_innovation=True)
+    z = jnp.ones((L // 16, 4))
+    r0 = AE.lgc_decode_ps(ae, z, jnp.zeros((K, L)))
+    r1 = AE.lgc_decode_ps(ae, z, jnp.ones((K, L)))
+    assert float(jnp.max(jnp.abs(r0 - r1))) > 1e-6
+
+
+def test_similarity_loss_zero_for_identical_encodings():
+    K, L = 3, 256
+    ae = AE.init_lgc_autoencoder(jax.random.PRNGKey(0), num_decoders=K,
+                                 ps_innovation=True)
+    g = jnp.broadcast_to(jax.random.normal(jax.random.PRNGKey(1), (L,)),
+                         (K, L))
+    _, parts = AE.ae_loss_ps(ae, g, jnp.zeros((K, L)), 0)
+    assert float(parts["l_sim"]) < 1e-10
+
+
+def test_rar_loss_trains_toward_identity():
+    """A few hundred SGD steps shrink reconstruction error on a family of
+    COMPRESSIBLE inputs (Fig. 14).  Note: the 4x bottleneck means i.i.d.
+    Gaussian inputs are information-theoretically unreconstructable — the
+    AE exploits structure in the gradients (the paper's Section III
+    finding), so the test inputs are smooth low-rank signals."""
+    K, L = 4, 256
+    ae = AE.init_lgc_autoencoder(jax.random.PRNGKey(0))
+    opt = jax.tree_util.tree_map(jnp.zeros_like, ae)
+    rng = jax.random.PRNGKey(1)
+    t = jnp.arange(L) / L
+    basis = jnp.stack([jnp.sin(2 * jnp.pi * (i + 1) * t) for i in range(8)])
+
+    @jax.jit
+    def step(ae, opt, g):
+        loss, grads = jax.value_and_grad(AE.ae_loss_rar)(ae, g)
+        opt = jax.tree_util.tree_map(lambda m, gr: 0.9 * m + gr, opt, grads)
+        ae = jax.tree_util.tree_map(lambda p, m: p - 3e-3 * m, ae, opt)
+        return ae, opt, loss
+
+    losses = []
+    for i in range(400):
+        rng, k1, k2 = jax.random.split(rng, 3)
+        common = jax.random.normal(k1, (8,)) @ basis
+        g = common[None] + 0.05 * jax.random.normal(k2, (K, L))
+        ae, opt, loss = step(ae, opt, g)
+        losses.append(float(loss))
+    assert np.mean(losses[-40:]) < 0.5 * np.mean(losses[:40]), (
+        np.mean(losses[:40]), np.mean(losses[-40:]))
+
+
+def test_compressed_length():
+    assert AE.compressed_length(256) == 64
+    assert AE.compressed_length(4096) == 1024

@@ -1,0 +1,82 @@
+"""Integration test of the dry-run machinery at subprocess scale: an
+8-fake-device (2x4) mesh stands in for the 512-device production meshes
+(same code path: lower from ShapeDtypeStructs, compile, memory/cost
+analysis, loop-aware HLO walk).  The real 16x16 / 2x16x16 runs live in
+experiments/dryrun (launch/dryrun.py --all)."""
+import json
+
+
+def test_small_mesh_lower_compile_all_kinds(subproc):
+    out = subproc("""
+import jax, json
+import numpy as np
+from repro.configs import get_arch
+from repro.configs.base import InputShape, TrainConfig
+from repro.launch.input_specs import batch_specs, cache_specs, params_specs
+from repro.launch.steps import (make_auto_train_step, make_decode_step,
+                                make_prefill_step)
+from repro.launch import hlo_walker as W
+from repro.models import build_model
+
+mesh = jax.make_mesh((2, 4), ("data", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+cfg = get_arch("llama3.2-1b").reduced()
+model = build_model(cfg)
+p = params_specs(model)
+
+with jax.set_mesh(mesh):
+    # train
+    shape = InputShape("t", 256, 8, "train")
+    ats = make_auto_train_step(model, TrainConfig(optimizer="adamw"), mesh)
+    bt = batch_specs(cfg, shape)
+    o = jax.eval_shape(ats.optimizer.init, p)
+    comp = ats.step_fn(bt).lower(p, o, bt, 0).compile()
+    walked = W.analyze(comp.as_text())
+    assert walked["flops_per_device"] > 0, walked
+    # useful-flops sanity: within 50x of 6ND/devices
+    n = model.param_count()
+    analytic = 6 * n * 8 * 256 / 8
+    ratio = walked["flops_per_device"] / analytic
+    assert 0.3 < ratio < 50, (walked["flops_per_device"], analytic)
+    ma = comp.memory_analysis()
+    assert ma.temp_size_in_bytes > 0
+
+    # prefill
+    shape_p = InputShape("p", 512, 8, "prefill")
+    compiled = make_prefill_step(model, mesh, shape_p).lower(
+        p, batch_specs(cfg, shape_p)).compile()
+    assert compiled.memory_analysis() is not None
+
+    # decode
+    shape_d = InputShape("d", 512, 8, "decode")
+    cache = cache_specs(model, shape_d)
+    tok = batch_specs(cfg, shape_d)["tokens"]
+    compiled = make_decode_step(model, mesh, shape_d).lower(
+        p, cache, tok, 511).compile()
+    w2 = W.analyze(compiled.as_text())
+    assert w2["flops_per_device"] > 0
+print("PASS")
+""", devices=8, timeout=900)
+    assert "PASS" in out
+
+
+def test_walker_exact_on_known_workload(subproc):
+    out = subproc("""
+import jax, jax.numpy as jnp
+from repro.launch import hlo_walker as W
+
+def f(x, w):
+    def body(h, _):
+        return jnp.tanh(h @ w), None
+    h, _ = jax.lax.scan(body, x, None, length=10)
+    return h.sum()
+
+x = jax.ShapeDtypeStruct((128, 256), "float32")
+w = jax.ShapeDtypeStruct((256, 256), "float32")
+comp = jax.jit(f).lower(x, w).compile()
+res = W.analyze(comp.as_text())
+expected = 2 * 128 * 256 * 256 * 10
+assert abs(res["flops_per_device"] - expected) / expected < 0.01, res
+print("PASS")
+""", devices=1, timeout=600)
+    assert "PASS" in out

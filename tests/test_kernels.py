@@ -1,0 +1,131 @@
+"""Pallas kernel validation: shape/dtype sweeps + hypothesis property tests
+against the pure-jnp oracles in kernels/ref.py (interpret mode on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+from repro.kernels.block_topk import block_topk
+from repro.kernels.matmul_lrelu import matmul_bias_lrelu
+from repro.kernels.sparsify_ef import TILE, sparsify_ef as ef_kernel
+
+SETTINGS = dict(max_examples=20, deadline=None)
+
+
+# ---------------------------------------------------------------------------
+# sparsify_ef
+
+
+@pytest.mark.parametrize("n", [TILE, 2 * TILE])
+@pytest.mark.parametrize("tau", [0.0, 0.5, 10.0])
+def test_sparsify_ef_shapes(n, tau):
+    g = jax.random.normal(jax.random.PRNGKey(0), (n,))
+    u = jax.random.normal(jax.random.PRNGKey(1), (n,)) * 0.1
+    v = jax.random.normal(jax.random.PRNGKey(2), (n,)) * 0.3
+    out_k = ef_kernel(g, u, v, jnp.float32(tau), jnp.float32(0.9))
+    out_r = ref.sparsify_ef_ref(g, u, v, tau, 0.9)
+    for a, b in zip(out_k, out_r):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2**31 - 1),
+       tau=st.floats(0.0, 3.0),
+       m=st.floats(0.0, 0.99),
+       extra=st.integers(0, 999))
+def test_sparsify_ef_property(seed, tau, m, extra):
+    """Padded wrapper handles arbitrary lengths; invariant: sent + v_out ==
+    v + m*u + g (conservation of the residual)."""
+    n = 4096 + extra
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    g = jax.random.normal(ks[0], (n,))
+    u = jax.random.normal(ks[1], (n,))
+    v = jax.random.normal(ks[2], (n,))
+    u2, v2, sent = ops.sparsify_ef(g, u, v, tau, m)
+    np.testing.assert_allclose(np.asarray(sent + v2),
+                               np.asarray(v + m * u + g),
+                               atol=1e-5)
+    # disjoint support
+    assert not np.any((np.asarray(sent) != 0) & (np.asarray(v2) != 0))
+    assert not np.any((np.asarray(sent) != 0) & (np.asarray(u2) != 0))
+
+
+# ---------------------------------------------------------------------------
+# block_topk / global_topk
+
+
+@pytest.mark.parametrize("shape,k", [((2, 128), 1), ((3, 256), 5),
+                                     ((1, 1024), 16), ((8, 128), 8)])
+def test_block_topk_sweep(shape, k):
+    x = jax.random.normal(jax.random.PRNGKey(0), shape)
+    vk, ik = block_topk(x, k)
+    vr, ir = ref.block_topk_ref(x, k)
+    assert np.array_equal(np.asarray(ik), np.asarray(ir))
+    np.testing.assert_allclose(np.asarray(vk), np.asarray(vr), atol=1e-6)
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2**31 - 1),
+       n=st.integers(100, 5000),
+       k=st.integers(1, 64))
+def test_global_topk_property(seed, n, k):
+    """global_topk returns exactly the k largest-|.| coordinates."""
+    k = min(k, n)
+    x = jax.random.normal(jax.random.PRNGKey(seed), (n,))
+    gv, gi = ops.global_topk(x, k, block=512)
+    ref_idx = np.argsort(-np.abs(np.asarray(x)), kind="stable")[:k]
+    # compare magnitude SETS (ties may reorder)
+    np.testing.assert_allclose(
+        np.sort(np.abs(np.asarray(gv))),
+        np.sort(np.abs(np.asarray(x)[ref_idx])), atol=1e-6)
+    got = np.abs(np.asarray(x)[np.asarray(gi)])
+    np.testing.assert_allclose(np.sort(got),
+                               np.sort(np.abs(np.asarray(x)[ref_idx])),
+                               atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# matmul + lrelu fusion / conv1d lowering
+
+
+@pytest.mark.parametrize("M,K,N", [(128, 128, 128), (256, 384, 128),
+                                   (128, 256, 256)])
+@pytest.mark.parametrize("lrelu", [True, False])
+def test_matmul_lrelu_sweep(M, K, N, lrelu):
+    x = jax.random.normal(jax.random.PRNGKey(0), (M, K))
+    w = jax.random.normal(jax.random.PRNGKey(1), (K, N)) * 0.05
+    b = jax.random.normal(jax.random.PRNGKey(2), (N,))
+    y = matmul_bias_lrelu(x, w, b, apply_lrelu=lrelu)
+    r = ref.matmul_bias_lrelu_ref(x, w, b, apply_lrelu=lrelu)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(r), rtol=1e-5,
+                               atol=1e-4)
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2**31 - 1),
+       L=st.sampled_from([64, 96, 160, 256]),
+       cin=st.sampled_from([1, 3, 4]),
+       cout=st.sampled_from([4, 64]),
+       stride=st.sampled_from([1, 2]))
+def test_conv1d_lrelu_property(seed, L, cin, cout, stride):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    x = jax.random.normal(ks[0], (L, cin))
+    w = jax.random.normal(ks[1], (3, cin, cout)) * 0.2
+    b = jax.random.normal(ks[2], (cout,)) * 0.1
+    y = ops.conv1d_lrelu(x, w, b, stride)
+    r = ref.conv1d_lrelu_ref(x, w, b, stride)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(r), rtol=1e-4,
+                               atol=1e-4)
+
+
+def test_lgc_encode_fast_matches_reference_encoder():
+    from repro.core.autoencoder import init_lgc_autoencoder, lgc_encode
+    ae = init_lgc_autoencoder(jax.random.PRNGKey(0))
+    for L in [256, 512, 2048]:
+        g = jax.random.normal(jax.random.PRNGKey(L), (L,))
+        z_fast = ops.lgc_encode_fast(ae, g)
+        z_ref = lgc_encode(ae, g)[0]
+        np.testing.assert_allclose(np.asarray(z_fast), np.asarray(z_ref),
+                                   rtol=1e-4, atol=1e-5)

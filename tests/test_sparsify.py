@@ -1,0 +1,103 @@
+"""Property tests of the sparsification layer (paper Section V-A)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import sparsify as SP
+
+PARAMS = {
+    "embed": {"w": jnp.zeros((32, 16))},
+    "layer1": {"w": jnp.zeros((48, 48)), "b": jnp.zeros((48,))},
+    "layer2": {"w": jnp.zeros((48, 48))},
+    "lm_head": {"w": jnp.zeros((16, 32))},
+}
+LAYOUT = SP.build_layout(PARAMS, sparsity=0.05)
+
+
+def test_layout_roles():
+    roles = {l.path: l.role for l in LAYOUT.leaves}
+    assert roles["embed/w"] == SP.ROLE_DENSE
+    assert roles["lm_head/w"] == SP.ROLE_TOPK_ONLY
+    assert roles["layer1/w"] == SP.ROLE_COMPRESSED
+    assert LAYOUT.mu_pad % SP.AE_ALIGN == 0
+    assert LAYOUT.n_total == 32 * 16 + 48 * 48 + 48 + 48 * 48 + 16 * 32
+    # per-leaf k = 0.05 * size
+    k1 = [l for l in LAYOUT.leaves if l.path == "layer1/w"][0]
+    assert k1.k == round(48 * 48 * 0.05)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_select_topk_picks_per_leaf_maxima(seed):
+    v = jax.random.normal(jax.random.PRNGKey(seed), (LAYOUT.n_total,))
+    vals, idx = SP.select_topk(v, LAYOUT)
+    vals = np.asarray(vals)
+    idx = np.asarray(idx)
+    vn = np.asarray(v)
+    for leaf in LAYOUT.compressed:
+        in_leaf = (idx >= leaf.offset) & (idx < leaf.offset + leaf.size)
+        assert in_leaf.sum() == leaf.k
+        seg = np.abs(vn[leaf.offset : leaf.offset + leaf.size])
+        thresh = np.sort(seg)[-leaf.k]
+        sel = np.abs(vals[in_leaf])
+        assert (sel >= thresh - 1e-6).all()
+        # values are the actual residual entries
+        np.testing.assert_allclose(vals[in_leaf], vn[idx[in_leaf]])
+    # padding carries sentinel index
+    pad = idx >= LAYOUT.n_total
+    assert pad.sum() == LAYOUT.mu_pad - LAYOUT.mu
+    assert (vals[pad] == 0).all()
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), m=st.floats(0.0, 0.99))
+def test_error_feedback_conservation(seed, m):
+    """momentum_correct + clear_sent never loses mass: what is not sent
+    stays in the accumulators."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    n = LAYOUT.n_total
+    g = jax.random.normal(ks[0], (n,))
+    u = jax.random.normal(ks[1], (n,))
+    v = jax.random.normal(ks[2], (n,))
+    u2, v2 = SP.momentum_correct(u, v, g, m)
+    vals, idx = SP.select_topk(v2, LAYOUT)
+    sent = SP.scatter_to_dense(vals, idx, n)
+    u3, v3 = SP.clear_sent(u2, v2, idx, n)
+    np.testing.assert_allclose(np.asarray(sent + v3), np.asarray(v2),
+                               atol=1e-6)
+    mask = np.asarray(sent) != 0
+    assert (np.asarray(v3)[mask] == 0).all()
+    assert (np.asarray(u3)[mask] == 0).all()
+
+
+def test_scatter_gather_roundtrip():
+    v = jax.random.normal(jax.random.PRNGKey(0), (LAYOUT.n_total,))
+    vals, idx = SP.select_topk(v, LAYOUT)
+    gathered = SP.gather_at(v, idx)
+    np.testing.assert_allclose(np.asarray(gathered), np.asarray(vals),
+                               atol=1e-6)
+
+
+def test_innovation_is_subset_of_topk():
+    vals = jax.random.normal(jax.random.PRNGKey(0), (LAYOUT.mu_pad,))
+    inno, inno_idx = SP.select_innovation(vals, 0.1)
+    inno = np.asarray(inno)
+    k_inv = max(1, round(LAYOUT.mu_pad * 0.1))
+    assert (inno != 0).sum() == k_inv
+    nz = np.flatnonzero(inno)
+    np.testing.assert_allclose(inno[nz], np.asarray(vals)[nz])
+    # they are the top-magnitude entries
+    thresh = np.sort(np.abs(np.asarray(vals)))[-k_inv]
+    assert (np.abs(inno[nz]) >= thresh - 1e-6).all()
+
+
+def test_dense_part_masks_exempt_layers():
+    g = jnp.ones((LAYOUT.n_total,))
+    d = np.asarray(SP.dense_part(g, LAYOUT))
+    for leaf in LAYOUT.leaves:
+        seg = d[leaf.offset : leaf.offset + leaf.size]
+        if leaf.role == SP.ROLE_DENSE:
+            assert (seg == 1).all()
+        else:
+            assert (seg == 0).all()
