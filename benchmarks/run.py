@@ -19,6 +19,7 @@ MODULES = [
     "fig13_sparsification_strategies",
     "fig14_ae_convergence",
     "kernels_bench",
+    "transports_bench",
 ]
 
 

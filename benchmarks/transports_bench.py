@@ -1,0 +1,89 @@
+"""Transport micro-benchmarks: one compressed step per (method x
+transport) on the sim substrate plus measured ring wire bytes vs the
+analytic all-reduce bound (derived column = per-node wire bytes, the
+quantity the paper's Tables IV/VI are about)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import row, time_call
+from repro.configs.base import CompressionConfig
+from repro.core import build_compressor
+from repro.core.phases import PHASE_COMPRESSED, PHASE_TOPK_AE
+from repro.dist import collectives as C
+
+PARAMS = {
+    "embed": {"w": jnp.zeros((128, 64))},
+    "layer1": {"w": jnp.zeros((256, 256)), "b": jnp.zeros((256,))},
+    "layer2": {"w": jnp.zeros((256, 256))},
+    "lm_head": {"w": jnp.zeros((64, 128))},
+}
+K = 4
+
+
+def main():
+    for method in ("dgc", "lgc_rar", "lgc_rar_q8", "lgc_ps"):
+        cc = CompressionConfig(method=method, sparsity=0.01,
+                               innovation_sparsity=0.001, warmup_steps=0,
+                               ae_train_steps=1)
+        comp = build_compressor(cc, PARAMS, K)
+        n = comp.layout.n_total
+        states = comp.init_sim_states(jax.random.PRNGKey(0))
+        g = jax.random.normal(jax.random.PRNGKey(1), (K, n)) * 0.01
+        phase = PHASE_COMPRESSED if method.startswith("lgc") \
+            else PHASE_TOPK_AE
+        # burn one AE-phase step so lgc state is warm
+        _, states, _ = comp.sim_step(states, g, 0, PHASE_TOPK_AE)
+        step_fn = jax.jit(comp.sim_step, static_argnums=(3,))
+        us = time_call(lambda: step_fn(states, g, 1, phase))
+        gg, _, _ = step_fn(states, g, 1, phase)
+        finite = bool(jnp.all(jnp.isfinite(gg)))
+        row(f"transports/sim_{method}", us,
+            f"finite={'yes' if finite else 'NO'}")
+
+    # selection backends on the hot path
+    for backend in ("jnp", "pallas"):
+        comp = build_compressor(
+            CompressionConfig(method="dgc", sparsity=0.01,
+                              topk_backend=backend), PARAMS, K)
+        v = jax.random.normal(jax.random.PRNGKey(2),
+                              (comp.layout.n_total,))
+        sel = jax.jit(comp._select)
+        us = time_call(lambda: sel(v))
+        row(f"transports/select_topk_{backend}", us,
+            f"mu_pad={comp.layout.mu_pad}")
+
+    # measured ring wire bytes: trace the real ring_allreduce schedule on
+    # an 8-fake-device mesh (subprocess — the device count must be forced
+    # before jax first initializes) and read the trace-time tally
+    import os
+    import subprocess
+    import sys
+    n = 1 << 20
+    K_ring = 8
+    code = f"""
+import jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from repro.dist import collectives as C
+mesh = jax.make_mesh(({K_ring},), ("data",))
+C.reset_wire_tally()
+jax.jit(jax.shard_map(lambda x: C.ring_allreduce(x[0], "data")[None],
+                      mesh=mesh, in_specs=P("data"), out_specs=P("data"),
+                      check_vma=False)).lower(
+    jax.ShapeDtypeStruct(({K_ring}, {n}), "float32"))
+print(int(C.wire_report()["ring_allreduce"]))
+"""
+    env = dict(os.environ,
+               XLA_FLAGS=f"--xla_force_host_platform_device_count={K_ring}")
+    env["PYTHONPATH"] = "src" + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, check=True)
+    wire = float(out.stdout.strip())
+    dense = n * 4
+    row("transports/ring_wire_1M_f32_8n", 0.0,
+        f"bytes/node={int(wire)} ({wire / dense:.2f}x of dense buffer)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,28 @@
+#!/usr/bin/env bash
+# CI smoke gate: pinned deps, tier-1 tests, kernel micro-bench, and the
+# end-to-end LGC train smoke on 2 fake devices (both transports).
+#
+#   scripts/ci.sh [--no-install]
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+if [[ "${1:-}" != "--no-install" ]]; then
+    python -m pip install -r requirements-dev.txt
+fi
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "=== tier-1 tests ==="
+python -m pytest -x -q
+
+echo "=== kernel micro-benchmarks (correctness-gated) ==="
+python benchmarks/kernels_bench.py
+
+echo "=== LGC end-to-end smoke (mesh + ring transports) ==="
+for transport in mesh ring; do
+    python -m repro.launch.train --arch llama3.2-1b --smoke --steps 12 \
+        --batch 4 --seq 64 --compression lgc_rar --warmup-steps 2 \
+        --ae-train-steps 4 --data-shards 2 --transport "$transport"
+done
+
+echo "CI OK"

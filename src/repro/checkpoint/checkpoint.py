@@ -13,12 +13,14 @@ from typing import Any, Dict, Tuple
 import jax
 import numpy as np
 
+from repro.utils.tree import keystr_path
+
 
 def _flatten(tree: Any) -> Dict[str, np.ndarray]:
     flat, _ = jax.tree_util.tree_flatten_with_path(tree)
     out = {}
     for path, leaf in flat:
-        key = jax.tree_util.keystr(path, simple=True, separator="/")
+        key = keystr_path(path)
         out[key] = np.asarray(leaf)
     return out
 
@@ -46,7 +48,7 @@ def load_checkpoint(path: str, template: Any) -> Tuple[Any, int]:
         flat, treedef = jax.tree_util.tree_flatten_with_path(template)
         leaves = []
         for p, leaf in flat:
-            key = jax.tree_util.keystr(p, simple=True, separator="/")
+            key = keystr_path(p)
             arr = z[key]
             assert arr.shape == tuple(leaf.shape), (key, arr.shape,
                                                     leaf.shape)

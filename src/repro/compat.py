@@ -1,0 +1,159 @@
+"""Compatibility layer for the pinned jax 0.4.37.
+
+The framework is written against the modern jax surface (``jax.shard_map``
+with ``axis_names``/``check_vma``, ``jax.make_mesh(..., axis_types=...)``,
+``jax.sharding.AxisType``, ``jax.sharding.get_abstract_mesh``,
+``jax.set_mesh``, ``jax.lax.axis_size``).  The container pins jax 0.4.37,
+which predates all of those.  ``install()`` (run automatically from
+``repro/__init__``) fills each gap with a semantically-equivalent shim and
+is a strict no-op for any API the installed jax already provides, so the
+codebase keeps working unchanged when the pin moves forward.
+
+Shim notes (all behaviours verified on 0.4.37, CPU backend):
+
+* ``jax.shard_map`` maps ``axis_names`` onto the legacy ``auto`` parameter
+  (``auto = mesh.axis_names - axis_names``) and ``check_vma`` onto
+  ``check_rep``.  ``mesh`` is required — 0.4.37 has no ambient-mesh
+  resolution for shard_map.
+* collectives over axes bound by an *enclosing* shard_map do NOT lower
+  from a nested shard_map on this pin ("manual subgroups" XLA error), and
+  ``axis_index`` inside a partial-auto region lowers to an unsupported
+  PartitionId on CPU.  Callers must therefore keep every region that uses
+  cross-axis collectives fully manual (see launch/steps.py, which runs the
+  gradient and compression regions as two sequential shard_maps instead
+  of nesting them).
+* ``jax.lax.axis_size(name)`` is implemented with the static
+  ``lax.psum(1, name)`` constant-fold, which 0.4.37 still performs.
+"""
+from __future__ import annotations
+
+import contextlib
+import enum
+import threading
+from typing import Any, Optional
+
+import jax
+
+_local = threading.local()
+
+
+# ---------------------------------------------------------------------------
+# mesh context tracking (set_mesh / get_abstract_mesh)
+
+
+class _AxisType(enum.Enum):
+    Auto = "auto"
+    Explicit = "explicit"
+    Manual = "manual"
+
+
+class _AbstractMeshShim:
+    """Just enough of AbstractMesh for callers that inspect axis names and
+    types (e.g. models.layers._constrain)."""
+
+    def __init__(self, mesh):
+        self._mesh = mesh
+        self.axis_names = tuple(mesh.axis_names)
+        self.axis_types = tuple(
+            getattr(mesh, "axis_types", None)
+            or (_AxisType.Auto,) * len(self.axis_names))
+
+    @property
+    def shape(self):
+        return dict(zip(self.axis_names, self._mesh.devices.shape))
+
+    @property
+    def empty(self) -> bool:
+        return not self.axis_names
+
+
+def _get_abstract_mesh():
+    mesh = getattr(_local, "mesh", None)
+    return _AbstractMeshShim(mesh) if mesh is not None else None
+
+
+@contextlib.contextmanager
+def _set_mesh(mesh):
+    """Context manager equivalent of ``jax.set_mesh``: records the mesh for
+    ``get_abstract_mesh`` and enters the legacy resource env so bare
+    PartitionSpec sharding hints resolve inside jit."""
+    prev = getattr(_local, "mesh", None)
+    _local.mesh = mesh
+    try:
+        with mesh:
+            yield mesh
+    finally:
+        _local.mesh = prev
+
+
+# ---------------------------------------------------------------------------
+# shard_map
+
+
+def _shard_map(f=None, *, mesh=None, in_specs=None, out_specs=None,
+               axis_names: Optional[set] = None, check_vma: bool = True,
+               check_rep: Optional[bool] = None, auto=None):
+    from jax.experimental.shard_map import shard_map as _legacy
+
+    if f is None:  # allow use as a decorator factory
+        def deco(fn):
+            return _shard_map(fn, mesh=mesh, in_specs=in_specs,
+                              out_specs=out_specs, axis_names=axis_names,
+                              check_vma=check_vma, check_rep=check_rep,
+                              auto=auto)
+        return deco
+    m = mesh if mesh is not None else getattr(_local, "mesh", None)
+    if m is None:
+        raise ValueError(
+            "repro.compat.shard_map: pass mesh= explicitly (jax 0.4.37 has "
+            "no ambient mesh for shard_map)")
+    if auto is None:
+        manual = set(axis_names) if axis_names else set(m.axis_names)
+        auto = frozenset(set(m.axis_names) - manual)
+    rep = check_rep if check_rep is not None else check_vma
+    if auto:
+        # partial-auto + replication checking is unsupported on this pin
+        rep = False
+    return _legacy(f, m, in_specs=in_specs, out_specs=out_specs,
+                   check_rep=rep, auto=frozenset(auto))
+
+
+# ---------------------------------------------------------------------------
+# make_mesh with axis_types
+
+
+def _wrap_make_mesh(orig):
+    def make_mesh(axis_shapes, axis_names, *, devices=None, axis_types=None):
+        # axis_types accepted for API parity; 0.4.37 meshes are Auto-only,
+        # which matches every call site in this repo.
+        del axis_types
+        return orig(axis_shapes, axis_names, devices=devices)
+    return make_mesh
+
+
+def _axis_size(name) -> int:
+    # static constant-fold: psum of a python literal returns the axis size
+    # (product over a tuple of names) as a plain int
+    return jax.lax.psum(1, name)
+
+
+# ---------------------------------------------------------------------------
+
+
+def install() -> None:
+    if not hasattr(jax, "shard_map"):
+        jax.shard_map = _shard_map
+    if not hasattr(jax.sharding, "AxisType"):
+        jax.sharding.AxisType = _AxisType
+    if not hasattr(jax.sharding, "get_abstract_mesh"):
+        jax.sharding.get_abstract_mesh = _get_abstract_mesh
+    if not hasattr(jax, "set_mesh"):
+        jax.set_mesh = _set_mesh
+    if not hasattr(jax.lax, "axis_size"):
+        jax.lax.axis_size = _axis_size
+    try:
+        import inspect
+        if "axis_types" not in inspect.signature(jax.make_mesh).parameters:
+            jax.make_mesh = _wrap_make_mesh(jax.make_mesh)
+    except (TypeError, ValueError):  # pragma: no cover - exotic builds
+        pass

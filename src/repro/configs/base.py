@@ -168,6 +168,17 @@ class CompressionConfig:
     bottleneck_channels: int = 4     # Table I conv5 filter count
     encode_quant_bits: int = 0       # beyond-paper: quantize encodings (0=off)
     exempt_first_last: bool = True   # paper Section VI-A layer exemption
+    # communication substrate for the distributed step: "mesh" (lax
+    # collectives, XLA picks the allreduce algorithm) or "ring" (the
+    # paper's explicit chunked ring schedule, wire bytes measured by
+    # repro.dist.collectives).  The single-host emulation transport
+    # ("sim") is selected via GradientCompressor.sim_step, not here.
+    transport: str = "mesh"
+    # residual top-k selection backend: "jnp" (lax.top_k reference) or
+    # "pallas" (kernels/ops.global_topk).  topk_interpret=False runs the
+    # Pallas kernel compiled (real TPUs); True interprets it (CPU).
+    topk_backend: str = "jnp"
+    topk_interpret: bool = True
 
 
 @dataclass(frozen=True)

@@ -9,18 +9,27 @@ Five methods, matching the paper's experimental comparison (Tables IV/VI):
   lgc_rar     LGC, ring-allreduce pattern (encode -> average -> decode)
   lgc_rar_q8  beyond-paper: lgc_rar with int8-quantized encodings
 
-Each compressor exposes TWO equivalent execution paths:
+Every method is written ONCE, in :meth:`GradientCompressor.step`, against
+the :class:`repro.dist.transport.Transport` protocol.  The substrate —
+*how bytes move between nodes* — is injected:
 
-  * ``dist_step``  — runs inside ``shard_map`` on the production mesh; the
-    per-node gradient is this shard's gradient and cross-node reductions
-    are jax.lax collectives over the ("pod","data") axes.  This is what the
-    trainer and the multi-pod dry-run use: the all-reduce *carries the
-    compressed representation*, which is the paper's claim expressed in
-    collective bytes.
-  * ``sim_step``   — pure function on stacked (K, n) per-node gradients for
-    single-host simulation (the paper's own experiments emulate several
-    nodes per GPU the same way).  Used by the convergence benchmarks; a
-    test asserts sim == dist on a fake 4-device mesh.
+  * ``MeshTransport``  lax collectives inside a fully-manual shard_map on
+    the production mesh (the trainer and multi-pod dry-run): the
+    all-reduce *carries the compressed representation*, which is the
+    paper's claim expressed in collective bytes.
+  * ``RingTransport``  same context, but reductions take the explicit
+    chunked ring schedule in repro.dist.collectives — the paper's
+    ring-allreduce pattern with measured wire bytes.
+  * ``SimTransport``   stacked (K, n) single-host arrays (the paper's own
+    experiments emulate several nodes per GPU the same way).  Used by the
+    convergence benchmarks; tests assert sim == mesh == ring.
+
+``dist_step`` / ``sim_step`` are thin wrappers that build the transport
+and call ``step`` — kept as the public API the launchers and tests use.
+
+Residual top-k selection dispatches on ``CompressionConfig.topk_backend``
+("jnp" reference vs the Pallas ``global_topk`` kernel), so the kernels in
+repro.kernels serve the training hot path, not just benchmarks.
 
 State is a PyTree carried in the train state; all shapes static.
 """
@@ -38,12 +47,9 @@ from repro.configs.base import CompressionConfig
 from repro.core import autoencoder as AE
 from repro.core import sparsify as SP
 from repro.core.phases import (PHASE_COMPRESSED, PHASE_TOPK_AE, PHASE_WARMUP)
+from repro.dist.transport import SimTransport, Transport, make_transport
 
 Axis = Sequence[str]
-
-
-def _pmean(x, axes: Optional[Axis]):
-    return jax.lax.pmean(x, axes) if axes else x
 
 
 @dataclass(frozen=True)
@@ -69,23 +75,50 @@ class GradientCompressor:
                 jnp.zeros_like, state["ae"])
         return state
 
-    # -- shared pieces ----------------------------------------------------------
+    def init_sim_states(self, key):
+        """Stacked per-node state for sim_step (AE stored once)."""
+        base = self.init_state(key)
+        out = {
+            "u": jnp.zeros((self.K,) + base["u"].shape, jnp.float32),
+            "v": jnp.zeros((self.K,) + base["v"].shape, jnp.float32),
+        }
+        for k in ("ae", "ae_mom"):
+            if k in base:
+                out[k] = base[k]
+        return out
 
-    def _accumulate(self, state, g):
+    # -- per-node pieces -------------------------------------------------------
+
+    def _accumulate(self, u, v, g):
         if self.cc.method == "sparse_gd":
             # plain residual accumulation, no momentum correction
-            v = state["v"] + g
-            return state["u"], v
-        return SP.momentum_correct(state["u"], state["v"], g,
-                                   self.cc.momentum_correction)
+            return u, v + g
+        return SP.momentum_correct(u, v, g, self.cc.momentum_correction)
+
+    def _select(self, v):
+        return SP.select_topk(v, self.layout,
+                              backend=self.cc.topk_backend,
+                              interpret=self.cc.topk_interpret)
+
+    # -- quantization (beyond-paper) -------------------------------------------
+
+    def _maybe_quantize(self, z):
+        if self.cc.method != "lgc_rar_q8":
+            return z
+        # symmetric per-tensor int8 fake-quant (dequantized domain so the
+        # all-reduce stays a float reduction of 1/4 the bytes when lowered
+        # with int8 transport; rate accounting uses 8 bits/val)
+        scale = jnp.maximum(jnp.max(jnp.abs(z)), 1e-12) / 127.0
+        return jnp.round(z / scale).clip(-127, 127) * scale
+
+    # -- AE online training (phase 2, Section V-B) -----------------------------
 
     def _ae_update(self, state, g_nodes, inno_nodes, step, ae_axes=()):
-        """One SGD step on the AE params (phase 2, Section V-B).  g_nodes:
-        (K, mu_pad) — identical on every data shard, so the update is
-        replicated over the dp axes.  Under tensor parallelism each model
-        shard compresses its own slice of the gradient: ``ae_axes`` names
-        the model axes to pmean the AE grads over so the shared AE stays
-        replicated."""
+        """One SGD step on the AE params.  g_nodes: (K, mu_pad) — a global
+        (replicated) value, so the update is identical on every node.
+        Under tensor parallelism each model shard compresses its own slice
+        of the gradient: ``ae_axes`` names the model axes to pmean the AE
+        grads over so the shared AE stays replicated."""
         cc = self.cc
         if cc.method == "lgc_ps":
             common_idx = step % self.K
@@ -114,285 +147,147 @@ class GradientCompressor:
                                     state["ae"], mom)
         return ae, mom, ae_loss
 
-    def _reconstruct_rar(self, ae, values, indices, z_avg):
-        """Decode the averaged encoding and scatter at (shared) indices."""
-        rec = AE.lgc_decode_rar(ae, z_avg[None])[0]          # (mu_pad,)
-        return SP.scatter_to_dense(rec, indices, self.layout.n_total)
-
-    def _sparse_mean(self, vals, idx, n, axes):
-        """Mean of per-node sparse (vals, idx) as a dense vector, moving
-        only K*k values+indices over the wire (all-gather), not n."""
-        if not axes:
-            return SP.scatter_to_dense(vals, idx, n)
-        if vals.shape[0] == 0:
-            return jnp.zeros((n,), jnp.float32)
-        K = self.K
-        vals_g = _all_gather(vals, axes, K)          # (K, k)
-        idx_g = _all_gather(idx, axes, K)
-        dense = jax.vmap(lambda vv, ii: SP.scatter_to_dense(vv, ii, n))(
-            vals_g, idx_g)
-        return dense.mean(0)
-
-    # -- quantization (beyond-paper) ---------------------------------------------
-
-    def _maybe_quantize(self, z):
-        if self.cc.method != "lgc_rar_q8":
-            return z
-        # symmetric per-tensor int8 fake-quant (dequantized domain so the
-        # psum stays a float all-reduce of 1/4 the bytes when lowered with
-        # int8 transport; rate accounting uses 8 bits/val)
-        scale = jnp.maximum(jnp.max(jnp.abs(z)), 1e-12) / 127.0
-        return jnp.round(z / scale).clip(-127, 127) * scale
-
     # ==========================================================================
-    # distributed step (inside shard_map; axes = manual mesh axis names)
+    # THE step: every method, once, against a Transport
     # ==========================================================================
 
-    def dist_step(self, state, g: jnp.ndarray, step: jnp.ndarray, phase: str,
-                  axes: Axis, ae_axes: Axis = (), node_index=None):
-        """Compress this shard's flat gradient and return the *global*
-        (aggregated) gradient vector plus the new compressor state.
+    def step(self, t: Transport, state, g, step, phase: str):
+        """Compress per-node gradients and return the *global* (aggregated)
+        gradient vector plus the new compressor state.
 
-        ``node_index`` is this shard's linear index over ``axes``; pass it
-        explicitly when calling from a *nested* shard_map (axis_index over
-        a parent-bound manual axis cannot lower there)."""
+        Value convention (see repro.dist.transport): ``g`` and
+        ``state["u"]/state["v"]`` are per-node; ``state["ae"]`` and the
+        returned global gradient are global.  Under SimTransport per-node
+        values carry a leading K axis; under Mesh/Ring they are this
+        shard's local arrays inside a fully-manual shard_map.
+        """
         cc, layout, n = self.cc, self.layout, self.layout.n_total
         stats: Dict[str, jnp.ndarray] = {}
 
         if phase == PHASE_WARMUP or cc.method == "none":
-            return _pmean(g, axes), state, stats
+            return t.mean(g), state, stats
 
-        axis_index = _axis_index(axes) if node_index is None else node_index
-        u, v = self._accumulate(state, g)
+        u, v = t.pernode(self._accumulate, in_axes=(0, 0, 0))(
+            state["u"], state["v"], g)
 
         # exempt-dense part: reduce ONLY the dense segments (not an
         # n-length mostly-zero vector — that would put dense-gradient
         # traffic back on the wire)
-        g_dense = SP.scatter_dense_segments(
-            _pmean(SP.dense_segments(g, layout), axes), layout, n)
+        dense_seg = t.pernode(lambda gg: SP.dense_segments(gg, layout))(g)
+        g_dense = SP.scatter_dense_segments(t.mean(dense_seg), layout, n)
         # exempt last layer: top-k values+indices exchanged sparsely
-        last_vals, last_idx = SP.select_topk_last(v, layout)
-        last_global = self._sparse_mean(last_vals, last_idx, n, axes)
+        last_vals, last_idx = t.pernode(
+            lambda vv: SP.select_topk_last(vv, layout))(v)
+        last_global = t.sparse_mean(last_vals, last_idx, n)
+
+        def clear(uu, vv, ii):
+            return SP.clear_sent(uu, vv, ii, n)
+        clear_own = t.pernode(clear, in_axes=(0, 0, 0))      # per-node idx
+        clear_shared = t.pernode(clear, in_axes=(0, 0, None))  # global idx
 
         if cc.method in ("sparse_gd", "dgc"):
-            vals, idx = SP.select_topk(v, layout)
-            global_g = self._sparse_mean(vals, idx, n, axes) \
-                + g_dense + last_global
-            u, v = SP.clear_sent(u, v, idx, n)
-            u, v = SP.clear_sent(u, v, last_idx, n)
+            vals, idx = t.pernode(self._select)(v)
+            global_g = t.sparse_mean(vals, idx, n) + g_dense + last_global
+            u, v = clear_own(u, v, idx)
+            u, v = clear_own(u, v, last_idx)
             return global_g, {**state, "u": u, "v": v}, stats
 
         # ---- LGC ----
-        if cc.method in ("lgc_rar", "lgc_rar_q8"):
-            # cyclic leader top-k (CLT-k): the leader's indices are shared
-            own_vals, own_idx = SP.select_topk(v, layout)
-            leader = step % self.K
-            is_leader = (axis_index == leader)
-            idx = jax.lax.psum(
-                jnp.where(is_leader, own_idx, 0), axes) if axes else own_idx
-            vals = SP.gather_at(v, idx)                      # (mu_pad,)
+        # cyclic leader top-k (CLT-k): the rotating leader's index set is
+        # shared by every node — for RAR this makes the mu-length values
+        # reduction the whole cross-node exchange; for PS it is the
+        # index-support reading under which the paper's Table IV/VI rates
+        # (0.012MB per non-leader node) close: non-leaders do NOT ship
+        # their own index sets, and each node's innovation is indexed
+        # locally within the support (log2(mu) bits).  Recorded in
+        # DESIGN.md.
+        if cc.method not in ("lgc_rar", "lgc_rar_q8", "lgc_ps"):
+            raise ValueError(f"unknown method {cc.method}")
 
-            if phase == PHASE_TOPK_AE:
-                # top-k updates + online AE training on gathered vectors.
-                # indices are shared (CLT-k) so reducing the mu-length
-                # values vector IS the whole cross-node exchange.
-                sent = SP.scatter_to_dense(_pmean(vals, axes), idx, n)
-                global_g = sent + g_dense + last_global
-                g_nodes = _all_gather(vals, axes, self.K)     # (K, mu_pad)
-                ae, ae_mom, ae_loss = self._ae_update(state, g_nodes, None,
-                                                      step, ae_axes)
-                stats["ae_loss"] = ae_loss
-                u, v = SP.clear_sent(u, v, idx, n)
-                u, v = SP.clear_sent(u, v, last_idx, n)
-                return global_g, {**state, "u": u, "v": v, "ae": ae,
-                                  "ae_mom": ae_mom}, stats
+        leader = step % self.K
+        _own_vals, own_idx = t.pernode(self._select)(v)
+        idx = t.from_leader(own_idx, leader)                 # global (mu_pad,)
+        vals = t.pernode(SP.gather_at, in_axes=(0, None))(v, idx)  # per-node
 
-            # phase 3: encode -> average (THE all-reduce) -> decode (eq 17-19)
-            z = AE.lgc_encode(state["ae"], vals)[0]           # (mu/16, 4)
-            z = self._maybe_quantize(z)
-            z_avg = _pmean(z, axes)
-            rec_dense = self._reconstruct_rar(state["ae"], vals, idx, z_avg)
-            global_g = rec_dense + g_dense + last_global
-            u, v = SP.clear_sent(u, v, idx, n)
-            u, v = SP.clear_sent(u, v, last_idx, n)
-            return global_g, {**state, "u": u, "v": v}, stats
+        is_ps = cc.method == "lgc_ps"
+        if is_ps:
+            frac = cc.innovation_sparsity / max(cc.sparsity, 1e-12)
+            inno = t.pernode(
+                lambda x: SP.select_innovation(x, frac)[0])(vals)
 
-        if cc.method == "lgc_ps":
-            # Index support: the paper's Table IV/VI rates (0.012MB per
-            # non-leader node) only close if non-leader nodes do NOT ship
-            # their own top-k index sets; we therefore use the rotating
-            # leader's index support for the AE input/reconstruction (the
-            # same CLT-k mechanism as the RAR pattern) and each node's
-            # innovation is its top values WITHIN that support, indexed
-            # locally (log2(mu) bits).  Interpretation recorded in
-            # DESIGN.md.
-            own_vals, own_idx = SP.select_topk(v, layout)
-            leader = step % self.K
-            is_leader = (axis_index == leader)
-            idx = jax.lax.psum(
-                jnp.where(is_leader, own_idx, 0), axes) if axes else own_idx
-            vals = SP.gather_at(v, idx)
-            inno, _inno_idx = SP.select_innovation(
-                vals, cc.innovation_sparsity / max(cc.sparsity, 1e-12))
-            if phase == PHASE_TOPK_AE:
-                sent = SP.scatter_to_dense(_pmean(vals, axes), idx, n)
-                global_g = sent + g_dense + last_global
-                g_nodes = _all_gather(vals, axes, self.K)
-                inno_nodes = _all_gather(inno, axes, self.K)
-                ae, ae_mom, ae_loss = self._ae_update(state, g_nodes,
-                                                      inno_nodes, step,
-                                                      ae_axes)
-                stats["ae_loss"] = ae_loss
-                u, v = SP.clear_sent(u, v, idx, n)
-                u, v = SP.clear_sent(u, v, last_idx, n)
-                return global_g, {**state, "u": u, "v": v, "ae": ae,
-                                  "ae_mom": ae_mom}, stats
+        if phase == PHASE_TOPK_AE:
+            # top-k updates + online AE training on the gathered vectors.
+            # indices are shared (CLT-k) so reducing the mu-length values
+            # vector IS the whole cross-node exchange.
+            sent = SP.scatter_to_dense(t.mean(vals), idx, n)
+            global_g = sent + g_dense + last_global
+            g_nodes = t.all_gather(vals)                     # (K, mu_pad)
+            inno_nodes = t.all_gather(inno) if is_ps else None
+            ae, ae_mom, ae_loss = self._ae_update(state, g_nodes,
+                                                  inno_nodes, step,
+                                                  t.ae_axes)
+            stats["ae_loss"] = ae_loss
+            u, v = clear_shared(u, v, idx)
+            u, v = clear_own(u, v, last_idx)
+            return global_g, {**state, "u": u, "v": v, "ae": ae,
+                              "ae_mom": ae_mom}, stats
 
-            # phase 3 (Fig. 8): the leader worker sends E_c(g~); every
-            # worker sends its innovation; the master decodes per node and
-            # averages the reconstructions (eqs. 12-13) over the shared
-            # index support.
-            z_own = AE.lgc_encode(state["ae"], vals)[0]
-            z_common = jax.lax.psum(
-                jnp.where(is_leader, z_own, 0.0), axes) if axes else z_own
-            inno_nodes = _all_gather(inno, axes, self.K)      # (K, mu_pad)
+        # phase 3 (compressed): encode -> move -> decode
+        def encode(x):
+            return AE.lgc_encode(state["ae"], x)[0]          # (mu/16, 4)
+
+        if is_ps:
+            # Fig. 8: the leader worker ships E_c(g~); every worker ships
+            # its innovation; the master decodes per node and averages the
+            # reconstructions (eqs. 12-13) over the shared index support.
+            z_own = t.pernode(encode)(vals)
+            z_common = t.from_leader(z_own, leader)
+            inno_nodes = t.all_gather(inno)                  # (K, mu_pad)
             recs = AE.lgc_decode_ps(state["ae"], z_common, inno_nodes)
             rec_dense = SP.scatter_to_dense(recs.mean(0), idx, n)
-            global_g = rec_dense + g_dense + last_global
-            u, v = SP.clear_sent(u, v, idx, n)
-            u, v = SP.clear_sent(u, v, last_idx, n)
-            return global_g, {**state, "u": u, "v": v}, stats
+        else:
+            # RAR (eq. 17-19): encode -> average (THE all-reduce) -> decode
+            z = t.pernode(encode)(vals)
+            z = t.pernode(self._maybe_quantize)(z)
+            z_avg = t.mean(z)
+            rec = AE.lgc_decode_rar(state["ae"], z_avg[None])[0]
+            rec_dense = SP.scatter_to_dense(rec, idx, n)
 
-        raise ValueError(f"unknown method {cc.method}")
+        global_g = rec_dense + g_dense + last_global
+        u, v = clear_shared(u, v, idx)
+        u, v = clear_own(u, v, last_idx)
+        return global_g, {**state, "u": u, "v": v}, stats
 
     # ==========================================================================
-    # simulated step (stacked (K, n) node gradients on one host)
+    # public wrappers (transport construction)
     # ==========================================================================
+
+    def dist_step(self, state, g: jnp.ndarray, step: jnp.ndarray, phase: str,
+                  axes: Axis, ae_axes: Axis = (), node_index=None,
+                  transport: Optional[str] = None):
+        """Distributed step for THIS shard's flat gradient, inside a
+        fully-manual shard_map over ``axes`` (+ the model axes).
+
+        ``node_index`` overrides the shard's linear index over ``axes``
+        (pass it when the caller already computed it).  ``transport``
+        overrides ``CompressionConfig.transport`` ("mesh" or "ring")."""
+        kind = transport if transport is not None else \
+            (self.cc.transport or "mesh")
+        if kind == "sim":
+            raise ValueError(
+                "transport='sim' is not a distributed transport (stacked "
+                "(K, n) arrays, no mesh axes) — call sim_step instead")
+        t = make_transport(kind, self.K, axes, ae_axes, node_index)
+        return self.step(t, state, g, step, phase)
 
     def sim_step(self, states, g_nodes: jnp.ndarray, step, phase: str):
-        """states: PyTree stacked over K (u, v per node; ae replicated is
-        stored once).  g_nodes: (K, n).  Returns (global_g (n,), states,
-        stats)."""
-        cc, layout, n = self.cc, self.layout, self.layout.n_total
-        K = self.K
-        stats: Dict[str, jnp.ndarray] = {}
-        if phase == PHASE_WARMUP or cc.method == "none":
-            return g_nodes.mean(0), states, stats
-
-        u, v = jax.vmap(self._accumulate)(
-            {"u": states["u"], "v": states["v"]}, g_nodes)
-
-        g_dense = jax.vmap(lambda gg: SP.dense_part(gg, layout))(
-            g_nodes).mean(0)
-        last_vals, last_idx = jax.vmap(
-            lambda vv: SP.select_topk_last(vv, layout))(v)
-        last_global = jax.vmap(
-            lambda a, b: SP.scatter_to_dense(a, b, n))(
-                last_vals, last_idx).mean(0)
-
-        def _clear_all(u, v, idx):
-            return jax.vmap(lambda uu, vv, ii: SP.clear_sent(uu, vv, ii, n))(
-                u, v, idx)
-
-        if cc.method in ("sparse_gd", "dgc"):
-            vals, idx = jax.vmap(lambda vv: SP.select_topk(vv, layout))(v)
-            sent = jax.vmap(lambda a, b: SP.scatter_to_dense(a, b, n))(
-                vals, idx)
-            global_g = sent.mean(0) + g_dense + last_global
-            u, v = _clear_all(u, v, idx)
-            u, v = _clear_all(u, v, last_idx)
-            return global_g, {**states, "u": u, "v": v}, stats
-
-        if cc.method in ("lgc_rar", "lgc_rar_q8"):
-            own_vals, own_idx = jax.vmap(
-                lambda vv: SP.select_topk(vv, layout))(v)
-            leader = step % K
-            idx_shared = own_idx[leader]                      # CLT-k
-            vals = jax.vmap(lambda vv: SP.gather_at(vv, idx_shared))(v)
-            idx = jnp.broadcast_to(idx_shared, (K,) + idx_shared.shape)
-            if phase == PHASE_TOPK_AE:
-                sent = jax.vmap(lambda a, b: SP.scatter_to_dense(a, b, n))(
-                    vals, idx)
-                global_g = sent.mean(0) + g_dense + last_global
-                ae, ae_mom, ae_loss = self._ae_update(states, vals, None,
-                                                      step)
-                stats["ae_loss"] = ae_loss
-                u, v = _clear_all(u, v, idx)
-                u, v = _clear_all(u, v, last_idx)
-                return global_g, {**states, "u": u, "v": v, "ae": ae,
-                                  "ae_mom": ae_mom}, stats
-            z = AE.lgc_encode(states["ae"], vals)             # (K, mu/16, 4)
-            z = jax.vmap(self._maybe_quantize)(z)
-            z_avg = z.mean(0)
-            rec_dense = self._reconstruct_rar(states["ae"], vals[0],
-                                              idx_shared, z_avg)
-            global_g = rec_dense + g_dense + last_global
-            u, v = _clear_all(u, v, idx)
-            u, v = _clear_all(u, v, last_idx)
-            return global_g, {**states, "u": u, "v": v}, stats
-
-        if cc.method == "lgc_ps":
-            # shared (leader) index support — see dist_step comment
-            own_vals, own_idx = jax.vmap(
-                lambda vv: SP.select_topk(vv, layout))(v)
-            leader = step % K
-            idx_shared = own_idx[leader]
-            vals = jax.vmap(lambda vv: SP.gather_at(vv, idx_shared))(v)
-            idx = jnp.broadcast_to(idx_shared, (K,) + idx_shared.shape)
-            frac = cc.innovation_sparsity / max(cc.sparsity, 1e-12)
-            inno, _ = jax.vmap(
-                lambda x: SP.select_innovation(x, frac))(vals)
-            if phase == PHASE_TOPK_AE:
-                sent = jax.vmap(lambda a, b: SP.scatter_to_dense(a, b, n))(
-                    vals, idx)
-                global_g = sent.mean(0) + g_dense + last_global
-                ae, ae_mom, ae_loss = self._ae_update(states, vals, inno,
-                                                      step)
-                stats["ae_loss"] = ae_loss
-                u, v = _clear_all(u, v, idx)
-                u, v = _clear_all(u, v, last_idx)
-                return global_g, {**states, "u": u, "v": v, "ae": ae,
-                                  "ae_mom": ae_mom}, stats
-            z_common = AE.lgc_encode(states["ae"], vals[leader])[0]
-            recs = AE.lgc_decode_ps(states["ae"], z_common, inno)
-            rec_dense = SP.scatter_to_dense(recs.mean(0), idx_shared, n)
-            global_g = rec_dense + g_dense + last_global
-            u, v = _clear_all(u, v, idx)
-            u, v = _clear_all(u, v, last_idx)
-            return global_g, {**states, "u": u, "v": v}, stats
-
-        raise ValueError(cc.method)
-
-    def init_sim_states(self, key):
-        """Stacked per-node state for sim_step (AE stored once)."""
-        base = self.init_state(key)
-        out = {
-            "u": jnp.zeros((self.K,) + base["u"].shape, jnp.float32),
-            "v": jnp.zeros((self.K,) + base["v"].shape, jnp.float32),
-        }
-        for k in ("ae", "ae_mom"):
-            if k in base:
-                out[k] = base[k]
-        return out
+        """Single-host emulation on stacked (K, n) node gradients.
+        states: PyTree stacked over K (u, v per node; ae stored once).
+        Returns (global_g (n,), states, stats)."""
+        return self.step(SimTransport(self.K), states, g_nodes, step, phase)
 
 
 # ---------------------------------------------------------------------------
-
-
-def _axis_index(axes: Optional[Axis]):
-    if not axes:
-        return jnp.zeros((), jnp.int32)
-    idx = jnp.zeros((), jnp.int32)
-    for ax in axes:
-        idx = idx * jax.lax.axis_size(ax) + jax.lax.axis_index(ax)
-    return idx
-
-
-def _all_gather(x, axes: Optional[Axis], K: int):
-    if not axes:
-        return x[None]
-    g = jax.lax.all_gather(x, axes, tiled=False)
-    return g.reshape((K,) + x.shape)
 
 
 def build_compressor(cc: CompressionConfig, params_template,

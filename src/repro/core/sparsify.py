@@ -26,6 +26,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.utils.tree import keystr_path
+
 ROLE_DENSE = "dense"            # exempt: raw dense gradient (first layer)
 ROLE_TOPK_ONLY = "topk_only"    # top-k transmitted, but not AE-compressed
 ROLE_COMPRESSED = "compressed"  # top-k -> autoencoder
@@ -81,7 +83,7 @@ def build_layout(params_template, sparsity: float,
     offset = 0
     n_leaves = len(flat)
     for i, (path, leaf) in enumerate(flat):
-        pstr = jax.tree_util.keystr(path, simple=True, separator="/")
+        pstr = keystr_path(path)
         size = int(np.prod(leaf.shape)) if leaf.shape else 1
         role = role_fn(pstr, i, n_leaves)
         k = 0
@@ -125,16 +127,44 @@ def _leaf_topk(seg: jnp.ndarray, k: int, offset: int):
     return vals, idx + offset
 
 
-def select_topk(v: jnp.ndarray, layout: GradientLayout):
+_PALLAS_BLOCK = 8192            # global_topk block (64 sublanes x 128 lanes)
+
+
+def _leaf_topk_pallas(seg: jnp.ndarray, k: int, offset: int,
+                      interpret: bool):
+    """Same contract as :func:`_leaf_topk` through the Pallas block-local
+    top-k kernel + merge (kernels/ops.global_topk): exact, descending
+    |value| order, so it is a drop-in for the jnp reference."""
+    from repro.kernels import ops as K_ops
+    block = max(_PALLAS_BLOCK, ((k + 127) // 128) * 128)
+    vals, idx = K_ops.global_topk(seg, k, block=block, interpret=interpret)
+    return vals, idx + offset
+
+
+SELECT_BACKENDS = ("jnp", "pallas")
+
+
+def select_topk(v: jnp.ndarray, layout: GradientLayout,
+                backend: str = "jnp", interpret: bool = True):
     """Top-k per compressed leaf of the residual vector ``v``.
+
+    ``backend`` picks the selection implementation: "jnp" (lax.top_k
+    reference) or "pallas" (the block-local top-k kernel; pass
+    ``interpret=False`` on real TPUs).  Both are exact and return the
+    same ordering for distinct magnitudes.
 
     Returns (values (mu_pad,), indices (mu_pad,) int32).  Padding entries
     carry value 0 and sentinel index n_total (dropped by scatters).
     """
+    assert backend in SELECT_BACKENDS, backend
     vals_list, idx_list = [], []
     for leaf in layout.compressed:
         seg = jax.lax.dynamic_slice_in_dim(v, leaf.offset, leaf.size)
-        vals, idx = _leaf_topk(seg, leaf.k, leaf.offset)
+        if backend == "pallas":
+            vals, idx = _leaf_topk_pallas(seg, leaf.k, leaf.offset,
+                                          interpret)
+        else:
+            vals, idx = _leaf_topk(seg, leaf.k, leaf.offset)
         vals_list.append(vals)
         idx_list.append(idx)
     pad = layout.mu_pad - layout.mu

@@ -1,0 +1,33 @@
+"""repro.dist — the distributed-communication substrate.
+
+  sharding     parameter/batch/cache PartitionSpec rules + local shapes
+  collectives  explicit ring allreduce, accounted lax wrappers, wire-byte
+               tally
+  transport    the Transport protocol (Mesh / Ring / Sim) the gradient
+               compressors are written against
+"""
+from repro.dist.collectives import (
+    all_gather,
+    pmean,
+    psum,
+    record_wire_bytes,
+    reset_wire_tally,
+    ring_allreduce,
+    ring_allreduce_multi,
+    wire_report,
+)
+from repro.dist.sharding import (
+    batch_pspec,
+    cache_pspecs,
+    keystr_path,
+    local_shape,
+    param_pspecs,
+    partition_spec,
+)
+from repro.dist.transport import (
+    MeshTransport,
+    RingTransport,
+    SimTransport,
+    Transport,
+    make_transport,
+)

@@ -1,0 +1,147 @@
+"""Explicit collectives with per-collective wire-byte accounting.
+
+``ring_allreduce`` implements the paper's ring-allreduce (Section V /
+Fig. 8) as an explicit chunked schedule over ``lax.ppermute``: a
+(K-1)-step reduce-scatter followed by a (K-1)-step all-gather, each step
+moving one 1/K-sized chunk to the ring neighbour.  Unlike ``lax.psum``
+(whose lowering XLA may or may not implement as a ring), the wire traffic
+here is *structural*: exactly ``2*(K-1)/K * nbytes`` leaves each node per
+reduction, and the module records it.
+
+Accounting semantics: shapes are static, so byte counts are recorded at
+*trace* time into a module-level tally.  Each jit specialization records
+its per-step bytes once; call :func:`reset_wire_tally` before building a
+step and :func:`wire_report` after to read "bytes on the wire per
+executed step".  Re-tracing without a reset double-counts — the launchers
+reset per phase build.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Dict, Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+AxisName = Union[str, Sequence[str]]
+
+_tally = threading.local()
+
+
+def _tally_dict() -> Dict[str, float]:
+    if not hasattr(_tally, "d"):
+        _tally.d = {}
+    return _tally.d
+
+
+def record_wire_bytes(kind: str, nbytes: float) -> None:
+    d = _tally_dict()
+    d[kind] = d.get(kind, 0.0) + float(nbytes)
+
+
+def reset_wire_tally() -> None:
+    _tally_dict().clear()
+
+
+def wire_report() -> Dict[str, float]:
+    """Per-node wire bytes recorded since the last reset, by collective."""
+    return dict(_tally_dict())
+
+
+def _axes_tuple(axis: AxisName) -> tuple:
+    return (axis,) if isinstance(axis, str) else tuple(axis)
+
+
+def _nbytes(x) -> int:
+    return int(np.prod(x.shape)) * jnp.dtype(x.dtype).itemsize if x.shape \
+        else jnp.dtype(x.dtype).itemsize
+
+
+# ---------------------------------------------------------------------------
+# accounted wrappers around lax collectives (MeshTransport uses these)
+
+
+def psum(x, axis: AxisName):
+    K = jax.lax.axis_size(_axes_tuple(axis))
+    # bandwidth-optimal allreduce moves 2*(K-1)/K of the buffer per node
+    record_wire_bytes("all_reduce", 2 * (K - 1) / max(K, 1) * _nbytes(x))
+    return jax.lax.psum(x, _axes_tuple(axis))
+
+
+def pmean(x, axis: AxisName):
+    K = jax.lax.axis_size(_axes_tuple(axis))
+    record_wire_bytes("all_reduce", 2 * (K - 1) / max(K, 1) * _nbytes(x))
+    return jax.lax.pmean(x, _axes_tuple(axis))
+
+
+def all_gather(x, axis: AxisName, K: Optional[int] = None):
+    """all_gather with a collapsed (K, ...) leading axis and accounting."""
+    axes = _axes_tuple(axis)
+    size = K if K is not None else jax.lax.axis_size(axes)
+    record_wire_bytes("all_gather", (size - 1) * _nbytes(x))
+    g = jax.lax.all_gather(x, axes, tiled=False)
+    return g.reshape((size,) + x.shape)
+
+
+# ---------------------------------------------------------------------------
+# explicit ring allreduce
+
+
+def ring_allreduce(x: jnp.ndarray, axis: str, op: str = "add") -> jnp.ndarray:
+    """Chunked ring allreduce of ``x`` over manual mesh axis ``axis``.
+
+    Must run inside a shard_map that binds ``axis`` manually.  Works for
+    any shape (flattened internally, zero-padded to a multiple of K).
+    ``op``: "add" or "mean".
+    """
+    assert op in ("add", "mean"), op
+    K = jax.lax.axis_size(axis)
+    if K == 1:
+        return x
+    i = jax.lax.axis_index(axis)
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    pad = (-n) % K
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
+    chunks = flat.reshape(K, -1)
+    chunk_elems = chunks.shape[1]
+    fwd = [(s, (s + 1) % K) for s in range(K)]
+    record_wire_bytes(
+        "ring_allreduce",
+        2 * (K - 1) * chunk_elems * jnp.dtype(x.dtype).itemsize)
+
+    def chunk_at(j):
+        return jax.lax.dynamic_index_in_dim(chunks, j % K, 0, keepdims=False)
+
+    # reduce-scatter: after K-1 hops node i holds the full sum of
+    # chunk (i+1) mod K
+    send = chunk_at(i)
+    for t in range(K - 1):
+        recv = jax.lax.ppermute(send, axis, fwd)
+        send = recv + chunk_at(i - t - 1)
+
+    # all-gather: circulate the completed chunks
+    out = jnp.zeros_like(chunks)
+    out = jax.lax.dynamic_update_index_in_dim(out, send, (i + 1) % K, 0)
+    for t in range(K - 1):
+        send = jax.lax.ppermute(send, axis, fwd)
+        out = jax.lax.dynamic_update_index_in_dim(out, send, (i - t) % K, 0)
+
+    res = out.reshape(-1)[:n].reshape(x.shape)
+    return res / K if op == "mean" else res
+
+
+def ring_allreduce_multi(x: jnp.ndarray, axes: Sequence[str],
+                         op: str = "add") -> jnp.ndarray:
+    """Ring allreduce over several mesh axes (e.g. ("pod", "data")) by
+    chaining per-axis rings — the hierarchical form real multi-pod rings
+    take (intra-pod ring, then inter-pod ring)."""
+    out = x
+    for ax in axes:
+        out = ring_allreduce(out, ax, op="add")
+    if op == "mean":
+        K = jax.lax.axis_size(tuple(axes))
+        out = out / K
+    return out

@@ -1,0 +1,161 @@
+"""Partitioning rules: parameter names -> PartitionSpecs.
+
+One place owns the mapping from the framework's parameter naming
+convention (see models/layers.py) to mesh PartitionSpecs, for training
+(TP over ``model``, optional FSDP over ``data``) and serving (KV-cache
+batch/sequence sharding).  Everything is name+shape driven and degrades
+to replication when a dimension is not divisible by its axis product, so
+the same rules serve the 1-device smoke configs and the 512-chip
+dry-runs.
+
+Naming convention (paths are '/'-joined key paths):
+  embed/w                (V, D)        vocab-sharded over model
+  lm_head/w              (D, V)        vocab(out)-sharded over model
+  .../{wq,wk,wv,wq_a,wq_b,wkv_a,wkv_b,w_gate,w_up,in_proj,proj,router}/w
+                         (..., D_in, D_out)   column-parallel (out dim)
+  .../{wo,w_down,out_proj}/w
+                         (..., D_in, D_out)   row-parallel (in dim)
+  .../ffn/{w_gate,w_up,w_down}   raw (..., E, _, _) MoE expert stacks:
+                         expert dim over model (expert parallelism)
+  biases / norm scales / ssm vectors: replicated.
+
+Stacked superblocks add a leading ``n_blocks`` dim, which is never
+sharded; the rules index dims from the right so they are rank-agnostic.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.utils.tree import keystr_path  # noqa: F401  (re-exported)
+
+# logical layer names whose weight shards its OUTPUT (last) dim
+_COL_PARALLEL = frozenset({
+    "wq", "wk", "wv", "wq_a", "wq_b", "wkv_a", "wkv_b",
+    "w_gate", "w_up", "in_proj", "proj", "router", "shared",
+})
+# logical layer names whose weight shards its INPUT (second-to-last) dim
+_ROW_PARALLEL = frozenset({"wo", "w_down", "out_proj"})
+# MoE expert-stack leaves (raw arrays, no trailing /w)
+_EXPERT_STACK = frozenset({"w_gate", "w_up", "w_down"})
+
+
+def _divisible(dim: int, size: int) -> bool:
+    return size <= 1 or (dim > 0 and dim % size == 0)
+
+
+def partition_spec(path: str, shape: Sequence[int], *, model_size: int = 1,
+                   fsdp_axes: Sequence[str] = (), fsdp_size: int = 1) -> P:
+    """PartitionSpec for one parameter leaf.
+
+    ``model`` goes on the role-determined dim when divisible; the fsdp
+    axes then claim the largest remaining divisible dim.  Anything that
+    doesn't fit is replicated — correctness first, the dry-run reports
+    what actually sharded.
+    """
+    segs = path.lower().split("/")
+    name = segs[-1]
+    logical = segs[-2] if name in ("w", "b") and len(segs) > 1 else name
+    nd = len(shape)
+    spec: list = [None] * nd
+
+    model_dim: Optional[int] = None
+    if nd >= 1 and model_size > 1 and name not in ("b", "scale"):
+        if "embed" in segs:
+            model_dim = nd - 2 if nd >= 2 else None        # vocab dim
+        elif "lm_head" in segs:
+            model_dim = nd - 1                              # vocab(out) dim
+        elif name in _EXPERT_STACK and nd >= 3:
+            model_dim = nd - 3                              # expert dim
+        elif logical in _COL_PARALLEL and nd >= 2:
+            model_dim = nd - 1
+        elif logical in _ROW_PARALLEL and nd >= 2:
+            model_dim = nd - 2
+        if model_dim is not None and not _divisible(shape[model_dim],
+                                                    model_size):
+            model_dim = None
+        if model_dim is not None:
+            spec[model_dim] = "model"
+
+    if fsdp_axes and fsdp_size > 1 and nd >= 1 and name != "scale":
+        fa = tuple(fsdp_axes)
+        cand = [d for d in range(nd)
+                if spec[d] is None and _divisible(shape[d], fsdp_size)
+                and shape[d] > 1]
+        if cand:
+            best = max(cand, key=lambda d: shape[d])
+            spec[best] = fa if len(fa) > 1 else fa[0]
+    return P(*spec)
+
+
+def param_pspecs(params_tree: Any, *, model_size: int = 1,
+                 fsdp_axes: Sequence[str] = (), fsdp_size: int = 1) -> Any:
+    """Tree of PartitionSpecs matching ``params_tree`` (params, grads, or
+    an optimizer-state tree — the rules key off the trailing path segments
+    so state wrappers like ``m/...`` inherit their parameter's spec)."""
+
+    def spec(path, leaf):
+        shape = tuple(getattr(leaf, "shape", ()) or ())
+        return partition_spec(keystr_path(path), shape,
+                              model_size=model_size, fsdp_axes=fsdp_axes,
+                              fsdp_size=fsdp_size)
+
+    return jax.tree_util.tree_map_with_path(spec, params_tree)
+
+
+def batch_pspec(dp_axes: Sequence[str]) -> P:
+    """Batch-dim spec over the data-parallel axes."""
+    da = tuple(dp_axes)
+    if not da:
+        return P(None)
+    return P(da if len(da) > 1 else da[0])
+
+
+def cache_pspecs(cache_tree: Any, *, dp_axes: Sequence[str], dp_size: int,
+                 model_size: int = 1,
+                 seq_shard_axis: Optional[str] = None) -> Any:
+    """KV-cache specs: batch dim over dp when divisible, else the sequence
+    dim over ``seq_shard_axis`` (long-context single-sequence decode); the
+    KV-heads dim over ``model`` when divisible.
+
+    Cache leaves are stacked over blocks: (n_blocks, B, S, [KH, hd]) for
+    attention K/V, (n_blocks, B, ...) for mamba/MLA states, (n_blocks, S)
+    for position rings.
+    """
+    da = tuple(dp_axes)
+    dp_entry = da if len(da) > 1 else (da[0] if da else None)
+
+    def spec(path, leaf):
+        shape = tuple(leaf.shape)
+        nd = len(shape)
+        s: list = [None] * nd
+        if nd >= 2:
+            if da and _divisible(shape[1], dp_size) and shape[1] > 1:
+                s[1] = dp_entry
+            elif seq_shard_axis and nd >= 3 and shape[2] > 1 \
+                    and _divisible(shape[2], dp_size):
+                s[2] = seq_shard_axis
+        if nd >= 4 and model_size > 1 and _divisible(shape[3], model_size):
+            s[3] = "model"
+        return P(*s)
+
+    return jax.tree_util.tree_map_with_path(spec, cache_tree)
+
+
+def local_shape(shape: Sequence[int], spec: P,
+                axis_sizes: Dict[str, int]) -> Tuple[int, ...]:
+    """Per-device shard shape of ``shape`` under ``spec`` on a mesh with
+    ``axis_sizes`` (axes missing from the dict count as size 1)."""
+    out = list(shape)
+    for d, entry in enumerate(spec):
+        if entry is None or d >= len(out):
+            continue
+        names = (entry,) if isinstance(entry, str) else tuple(entry)
+        denom = int(np.prod([axis_sizes.get(n, 1) for n in names]))
+        if denom > 1:
+            assert out[d] % denom == 0, (shape, spec, axis_sizes)
+            out[d] //= denom
+    return tuple(out)

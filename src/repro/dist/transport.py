@@ -1,0 +1,172 @@
+"""The Transport abstraction: *how bytes move between LGC nodes*.
+
+The paper's two instantiations (parameter-server Fig. 5, ring-allreduce
+Fig. 8) differ only in the communication substrate, never in the
+compression math.  ``GradientCompressor`` is therefore written once
+against this protocol, and the substrate is swapped per run:
+
+  MeshTransport  lax collectives inside a fully-manual shard_map — the
+                 production path (XLA chooses the allreduce algorithm).
+  RingTransport  same execution context, but every cross-node reduction
+                 routes through the explicit chunked ring schedule in
+                 repro.dist.collectives, so the paper's ring pattern is
+                 actually exercised and its wire bytes are *measured*
+                 (see collectives.wire_report), not estimated.
+  SimTransport   stacked (K, n) single-host arrays — the paper's own
+                 several-nodes-per-GPU emulation; collectives become
+                 axis-0 reductions and per-node compute becomes vmap.
+
+Value convention: a *per-node* value is this node's shard under
+Mesh/Ring and carries a leading K axis under Sim; a *global* value is
+replicated under Mesh/Ring and unbatched under Sim.  ``pernode`` maps a
+per-node function (in_axes marks which args are per-node, vmap-style);
+``mean``/``sum``/``all_gather``/``from_leader`` cross the node boundary
+and return global values.  A transport-equivalence test asserts all
+three produce identical global gradients for all five methods.
+
+Adding a transport = implementing these six methods (see DESIGN.md).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Optional, Protocol, Sequence, Tuple, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist import collectives as C
+
+Axis = Sequence[str]
+
+
+@runtime_checkable
+class Transport(Protocol):
+    K: int
+    ae_axes: Tuple[str, ...]
+
+    def pernode(self, fn: Callable, in_axes=0) -> Callable: ...
+    def mean(self, x): ...
+    def sum(self, x): ...
+    def all_gather(self, x): ...
+    def from_leader(self, x, leader): ...
+    def sparse_mean(self, vals, idx, n: int): ...
+
+
+def _scatter(vals, idx, n):
+    return jnp.zeros((n,), vals.dtype).at[idx].add(vals, mode="drop")
+
+
+# ===========================================================================
+
+
+@dataclass(frozen=True)
+class MeshTransport:
+    """Per-node code runs as-is on this shard; cross-node ops are lax
+    collectives over the (fully manually bound) ``axes``."""
+    axes: Tuple[str, ...]
+    K: int
+    ae_axes: Tuple[str, ...] = ()
+    node_index: Optional[jnp.ndarray] = None   # override for exotic callers
+
+    def _index(self):
+        if self.node_index is not None:
+            return self.node_index
+        idx = jnp.zeros((), jnp.int32)
+        for ax in self.axes:
+            idx = idx * jax.lax.axis_size(ax) + jax.lax.axis_index(ax)
+        return idx
+
+    def pernode(self, fn, in_axes=0):
+        return fn
+
+    def mean(self, x):
+        return C.pmean(x, self.axes) if self.axes else x
+
+    def sum(self, x):
+        return C.psum(x, self.axes) if self.axes else x
+
+    def all_gather(self, x):
+        return C.all_gather(x, self.axes, self.K) if self.axes else x[None]
+
+    def from_leader(self, x, leader):
+        if not self.axes:
+            return x
+        is_leader = (self._index() == leader)
+        zero = jnp.zeros_like(x)
+        return self.sum(jnp.where(is_leader, x, zero))
+
+    def sparse_mean(self, vals, idx, n):
+        """Mean of per-node sparse (vals, idx) as a dense (n,) vector,
+        moving only K*k values+indices over the wire, not n."""
+        if not self.axes:
+            return _scatter(vals, idx, n)
+        if vals.shape[0] == 0:
+            return jnp.zeros((n,), jnp.float32)
+        vals_g = self.all_gather(vals)
+        idx_g = self.all_gather(idx)
+        dense = jax.vmap(lambda vv, ii: _scatter(vv, ii, n))(vals_g, idx_g)
+        return dense.mean(0)
+
+
+@dataclass(frozen=True)
+class RingTransport(MeshTransport):
+    """MeshTransport with every cross-node reduction routed through the
+    explicit chunked ring in repro.dist.collectives (hierarchical per-axis
+    rings on multi-axis dp meshes)."""
+
+    def mean(self, x):
+        return C.ring_allreduce_multi(x, self.axes, op="mean") \
+            if self.axes else x
+
+    def sum(self, x):
+        return C.ring_allreduce_multi(x, self.axes, op="add") \
+            if self.axes else x
+
+
+# ===========================================================================
+
+
+@dataclass(frozen=True)
+class SimTransport:
+    """Single-host emulation on stacked (K, ...) node arrays."""
+    K: int
+    ae_axes: Tuple[str, ...] = ()
+
+    def pernode(self, fn, in_axes=0):
+        return jax.vmap(fn, in_axes=in_axes)
+
+    def mean(self, x):
+        return x.mean(0)
+
+    def sum(self, x):
+        return x.sum(0)
+
+    def all_gather(self, x):
+        return x
+
+    def from_leader(self, x, leader):
+        return jax.lax.dynamic_index_in_dim(x, leader, 0, keepdims=False)
+
+    def sparse_mean(self, vals, idx, n):
+        if vals.shape[-1] == 0:
+            return jnp.zeros((n,), jnp.float32)
+        dense = jax.vmap(lambda vv, ii: _scatter(vv, ii, n))(vals, idx)
+        return dense.mean(0)
+
+
+# ===========================================================================
+
+
+TRANSPORTS = ("mesh", "ring", "sim")
+
+
+def make_transport(kind: str, K: int, axes: Axis = (),
+                   ae_axes: Axis = (), node_index=None):
+    """Factory keyed by CompressionConfig.transport."""
+    if kind == "mesh":
+        return MeshTransport(tuple(axes), K, tuple(ae_axes), node_index)
+    if kind == "ring":
+        return RingTransport(tuple(axes), K, tuple(ae_axes), node_index)
+    if kind == "sim":
+        return SimTransport(K, tuple(ae_axes))
+    raise ValueError(f"unknown transport {kind!r}; known: {TRANSPORTS}")

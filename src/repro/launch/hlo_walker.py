@@ -133,7 +133,9 @@ def parse_hlo(text: str) -> Dict[str, Computation]:
                 cur.max_int_const = max(cur.max_int_const, int(cm.group(1)))
 
         if op == "dot":
-            lhs = re.search(r"dot\(\s*%?([\w.\-]+)", line)
+            # operands in optimized HLO carry their type first
+            # ("dot(f32[128,256]{1,0} %p.1, ...)") — anchor on the %
+            lhs = re.search(r"dot\([^%)]*%([\w.\-]+)", line)
             cdim = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", line)
             contract = 1
             if lhs and cdim and lhs.group(1) in symbols:

@@ -28,6 +28,8 @@ import os
 from dataclasses import dataclass
 from typing import Dict, Optional
 
+from repro.utils.tree import keystr_path
+
 PEAK_FLOPS = 197e12
 HBM_BW = 819e9
 ICI_BW = 50e9
@@ -46,7 +48,7 @@ def active_param_fraction(cfg) -> float:
     total = active = 0
     flat, _ = jax.tree_util.tree_flatten_with_path(shapes)
     for path, leaf in flat:
-        p = jax.tree_util.keystr(path, simple=True, separator="/")
+        p = keystr_path(path)
         n = int(np.prod(leaf.shape))
         total += n
         last = p.split("/")[-1]

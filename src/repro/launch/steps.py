@@ -7,14 +7,21 @@ Two training paths and two serving paths:
   DP over ``pod``+``data``).  The gradient all-reduce is implicit.  Used
   for every (arch x shape) dry-run baseline and for the big configs.
 
-* ``make_lgc_train_step``   — the paper: outer ``shard_map`` manual over
-  the dp axes (each shard = one LGC "node"), model axis auto for TP; an
-  inner ``shard_map`` manual over ``model`` runs the gradient compressor
-  per model shard, so the cross-node reduction carries top-k values
-  (phase 2) or autoencoder encodings (phase 3) instead of the dense
-  gradient.  EF/momentum state lives per (node x model-shard) as a
-  (DP, MP, n_local) array.  Params stay replicated across dp shards
-  (paper semantics: every node holds the model).
+* ``make_lgc_train_step``   — the paper: two sequential regions inside
+  one jit (nesting shard_maps is deliberately avoided: collectives over
+  outer-bound manual axes cannot lower from a nested shard_map on the
+  pinned jax/XLA).  Region 1 computes per-node gradients with a vmap
+  over the node axis under GSPMD auto partitioning (node axis sharded
+  over dp, model axis auto for TP — keeping the node axis means no
+  gradient all-reduce is ever emitted); region 2 is a ``shard_map``
+  fully manual over ALL mesh axes running the gradient compressor per
+  (node x model-shard), so the cross-node reduction carries top-k
+  values (phase 2) or autoencoder encodings (phase 3) instead of the
+  dense gradient — over lax collectives (``transport="mesh"``) or the
+  explicit chunked ring in repro.dist.collectives (``transport="ring"``,
+  wire bytes measured).  EF/momentum state lives per (node x
+  model-shard) as a (DP, MP, n_local) array.  Params stay replicated
+  across dp shards (paper semantics: every node holds the model).
 
 * ``make_prefill_step`` / ``make_decode_step`` — serving, plain jit auto;
   decode shards the KV cache batch over dp axes, or the sequence dim when
@@ -168,7 +175,6 @@ def make_lgc_train_step(model: Model, tc: TrainConfig, mesh,
     mp = model_size_of(mesh)
     dp_axes = dp_axes_of(mesh)
     dp = dp_size_of(mesh)
-    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
 
     p_shapes = params_specs(model)
     # model-axis-only specs (params replicated over dp in LGC mode)
@@ -189,88 +195,99 @@ def make_lgc_train_step(model: Model, tc: TrainConfig, mesh,
     compressor = build_compressor(cc, local_template, dp)
     n_local = compressor.layout.n_total
 
+    dp_tuple = dp_axes if len(dp_axes) > 1 else dp_axes[0]
     comp_specs: Dict[str, Any] = {
-        "u": P(dp_axes if len(dp_axes) > 1 else dp_axes[0], "model", None),
-        "v": P(dp_axes if len(dp_axes) > 1 else dp_axes[0], "model", None),
+        "u": P(dp_tuple, "model", None),
+        "v": P(dp_tuple, "model", None),
     }
     has_ae = cc.method.startswith("lgc")
     if has_ae:
         comp_specs["ae"] = P()
         comp_specs["ae_mom"] = P()
 
-    dp_tuple = dp_axes if len(dp_axes) > 1 else dp_axes[0]
+    # all mesh axes, bound manually by the compression region
+    all_axes = set(mesh.axis_names)
+    model_axes = ("model",) if mp > 1 else ()
+
+    def _prepend(spec_tree, lead):
+        return jax.tree_util.tree_map(
+            lambda s: P(*((lead,) + tuple(s))), spec_tree,
+            is_leaf=lambda x: isinstance(x, P))
+
+    # stacked per-node gradients: (DP, *leaf) — node axis over dp, model
+    # dims per the parameter specs (the compression region binds both
+    # manually)
+    grads_stack_specs = _prepend(pspecs, dp_tuple)
 
     def build_phase(phase: str, batch_tree):
-        def outer(params, opt_state, comp_state, batch, step):
-            def loss_fn(p):
-                return model.loss(p, batch, remat=remat)
-            (loss, metrics), grads = jax.value_and_grad(
-                loss_fn, has_aux=True)(params)
+        # ---- region 1: per-node gradients --------------------------------
+        # vmap over the node axis under GSPMD auto partitioning: the batch
+        # is reshaped (B,) -> (DP, B/DP) with the node axis sharded over
+        # dp, so each device computes ITS node's gradient and — crucially
+        # — no gradient all-reduce is ever emitted (the node axis is kept,
+        # not summed).  The model axis stays auto for TP.  A vmap is used
+        # instead of a dp-manual shard_map because on the pinned jax a
+        # partial-auto shard_map cannot return auto-sharded (TP) gradients
+        # when model > 1 (XLA manual-subgroup check).
+        def grad_region(params, batch):
+            def node_loss(b):
+                def loss_fn(p):
+                    return model.loss(p, b, remat=remat)
+                (_loss, metrics), grads = jax.value_and_grad(
+                    loss_fn, has_aux=True)(params)
+                return grads, metrics
 
-            u3 = comp_state["u"]          # local: (1, MP, n_local)
-            v3 = comp_state["v"]
+            batch_nodes = jax.tree_util.tree_map(
+                lambda x: x.reshape((dp, x.shape[0] // dp) + x.shape[1:]),
+                batch)
+            grads_stack, metrics = jax.vmap(node_loss)(batch_nodes)
+            grads_stack = jax.lax.with_sharding_constraint(
+                grads_stack, _shard(mesh, grads_stack_specs))
+            return grads_stack, metrics
+
+        # ---- region 2: compression + aggregation -------------------------
+        # fully manual over every mesh axis: each (node x model-shard)
+        # device flattens its local gradient block and the cross-node
+        # reduction moves compressed payloads via the configured transport.
+        def compress_region(grads_stack, u3, v3, ae_part, step):
+            grads_local = jax.tree_util.tree_map(lambda g: g[0],
+                                                 grads_stack)
+            st = {"u": u3[0, 0], "v": v3[0, 0], **ae_part}
+            flat_g = tree_flatten_vector(grads_local)
+            gflat, new_st, stats = compressor.dist_step(
+                st, flat_g, step, phase, dp_axes, ae_axes=model_axes)
+            g_global = tree_unflatten_vector(gflat, local_template)
+            new_ae = {k: new_st[k] for k in ae_part}
+            return (g_global, new_st["u"][None, None],
+                    new_st["v"][None, None], new_ae, stats)
+
+        compress_sm = jax.shard_map(
+            compress_region, mesh=mesh,
+            in_specs=(grads_stack_specs, P(dp_tuple, "model", None),
+                      P(dp_tuple, "model", None), P(), P()),
+            out_specs=(pspecs, P(dp_tuple, "model", None),
+                       P(dp_tuple, "model", None), P(), P()),
+            axis_names=all_axes, check_vma=False)
+
+        # ---- whole step (jit): grads -> compress -> optimizer ------------
+        def step_fn(params, opt_state, comp_state, batch, step):
+            grads_stack, metrics = grad_region(params, batch)
             ae_part = {k: comp_state[k] for k in ("ae", "ae_mom")
                        if k in comp_state}
-
-            # node index over the dp axes, computed where those axes were
-            # just bound (axis_index can't lower in the nested region)
-            node_idx = jnp.zeros((), jnp.int32)
-            for ax in dp_axes:
-                node_idx = (node_idx * jax.lax.axis_size(ax)
-                            + jax.lax.axis_index(ax))
-
-            def inner(grads_local, u, v, ae_part, step, node_idx):
-                st = {"u": u[0, 0], "v": v[0, 0], **ae_part}
-                flat_g = tree_flatten_vector(grads_local)
-                gflat, new_st, stats = compressor.dist_step(
-                    st, flat_g, step, phase, dp_axes,
-                    ae_axes=("model",) if mp > 1 else (),
-                    node_index=node_idx)
-                g_global = tree_unflatten_vector(gflat, grads_local)
-                new_ae = {k: new_st[k] for k in ae_part}
-                return (g_global, new_st["u"][None, None],
-                        new_st["v"][None, None], new_ae, stats)
-
-            inner_in = (param_pspecs(grads, model_size=mp),
-                        P(None, "model", None), P(None, "model", None),
-                        P(), P(), P())
-            inner_out = (param_pspecs(grads, model_size=mp),
-                         P(None, "model", None), P(None, "model", None),
-                         P(), P())
-            g_global, u3, v3, ae_part, stats = jax.shard_map(
-                inner, in_specs=inner_in, out_specs=inner_out,
-                axis_names={"model"}, check_vma=False)(grads, u3, v3,
-                                                       ae_part, step,
-                                                       node_idx)
-
+            g_global, u3, v3, ae_part, stats = compress_sm(
+                grads_stack, comp_state["u"], comp_state["v"], ae_part,
+                step)
             new_params, new_opt = optimizer.update(g_global, opt_state,
                                                    params, step)
             metrics = jax.tree_util.tree_map(
-                lambda x: jax.lax.pmean(x, dp_axes), metrics)
+                lambda x: jnp.mean(x, axis=0), metrics)
             for k, val in stats.items():
                 metrics[k] = val
             new_comp = {"u": u3, "v": v3, **ae_part}
             return new_params, new_opt, new_comp, metrics
 
-        batch_in_specs = jax.tree_util.tree_map(
-            lambda l: P(*((dp_tuple,) + (None,) * (len(l.shape) - 1))),
-            batch_tree)
-        comp_in_specs = {
-            "u": P(dp_tuple, None, None), "v": P(dp_tuple, None, None)}
-        if has_ae:
-            comp_in_specs["ae"] = P()
-            comp_in_specs["ae_mom"] = P()
-
-        sm = jax.shard_map(
-            outer,
-            mesh=mesh,
-            in_specs=(P(), P(), comp_in_specs, batch_in_specs, P()),
-            out_specs=(P(), P(), comp_in_specs, P()),
-            axis_names=set(dp_axes),
-            check_vma=False,
-        )
         return jax.jit(
-            sm,
+            step_fn,
             in_shardings=(_shard(mesh, pspecs), _shard(mesh, ospecs),
                           _shard(mesh, comp_specs),
                           _shard(mesh, _batch_pspecs(batch_tree, dp_axes)),

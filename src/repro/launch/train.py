@@ -29,6 +29,16 @@ def parse_args(argv=None):
                    choices=["none", "sparse_gd", "dgc", "lgc_ps", "lgc_rar",
                             "lgc_rar_q8"])
     p.add_argument("--sparsity", type=float, default=0.001)
+    p.add_argument("--transport", default="mesh", choices=["mesh", "ring"],
+                   help="communication substrate: lax collectives (mesh) "
+                        "or the explicit chunked ring with measured wire "
+                        "bytes (ring)")
+    p.add_argument("--topk-backend", default="jnp",
+                   choices=["jnp", "pallas"],
+                   help="residual top-k selection backend")
+    p.add_argument("--topk-compiled", action="store_true",
+                   help="compile the Pallas selection kernel (real TPUs); "
+                        "default interprets it on CPU")
     p.add_argument("--warmup-steps", type=int, default=10)
     p.add_argument("--ae-train-steps", type=int, default=15)
     p.add_argument("--optimizer", default="adamw",
@@ -77,7 +87,10 @@ def main(argv=None):
     model = build_model(cfg)
     cc = CompressionConfig(method=args.compression, sparsity=args.sparsity,
                            warmup_steps=args.warmup_steps,
-                           ae_train_steps=args.ae_train_steps)
+                           ae_train_steps=args.ae_train_steps,
+                           transport=args.transport,
+                           topk_backend=args.topk_backend,
+                           topk_interpret=not args.topk_compiled)
     tc = TrainConfig(optimizer=args.optimizer, learning_rate=args.lr,
                      steps=args.steps, seed=args.seed, compression=cc)
     mesh = make_host_mesh(args.data_shards, args.model_shards)
@@ -96,6 +109,7 @@ def main(argv=None):
     use_lgc = args.compression != "none"
     history = []
     if use_lgc:
+        from repro.dist import collectives as coll
         lts = make_lgc_train_step(model, tc, mesh)
         params, opt_state, comp_state = lts.init(rng, model, mesh)
         report = rate_report(cc, lts.compressor.layout, lts.dp_size)
@@ -107,9 +121,18 @@ def main(argv=None):
         for step in range(args.steps):
             phase = phase_for_step(step, cc)
             if phase not in fns:
+                # per-phase wire accounting: bytes are recorded at trace
+                # time, so reset before each phase build and report what
+                # one step of this phase moves per node
+                coll.reset_wire_tally()
                 fns[phase] = lts.make_step(phase, sds)
             params, opt_state, comp_state, metrics = fns[phase](
                 params, opt_state, comp_state, batch, step)
+            if step == 0 or phase_for_step(step - 1, cc) != phase:
+                wire = coll.wire_report()
+                if wire:
+                    log.info("phase=%s wire bytes/node/step: %s", phase,
+                             {k: int(v) for k, v in wire.items()})
             batch = next(data)
             if step % args.log_every == 0 or step == args.steps - 1:
                 loss = float(metrics["loss"])

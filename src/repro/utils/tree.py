@@ -15,6 +15,24 @@ import jax.numpy as jnp
 import numpy as np
 
 
+def keystr_path(path) -> str:
+    """'/'-joined key path.  Replacement for
+    ``jax.tree_util.keystr(path, simple=True, separator="/")`` — the
+    ``simple``/``separator`` kwargs do not exist on the jax 0.4.37 pin, so
+    the string is built from the key entries directly."""
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):          # DictKey / FlattenedIndexKey
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):        # SequenceKey
+            parts.append(str(k.idx))
+        elif hasattr(k, "name"):       # GetAttrKey
+            parts.append(str(k.name))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
 def tree_count_params(tree: Any) -> int:
     """Total number of scalar parameters in a PyTree."""
     leaves = jax.tree_util.tree_leaves(tree)

@@ -1,0 +1,82 @@
+"""Minimal stand-in for the ``hypothesis`` property-testing API surface
+this test-suite uses (``given``, ``settings``, ``strategies.integers/
+floats/sampled_from``).
+
+The CI image installs the real hypothesis (see requirements.txt); this
+shim keeps the property tests *runnable* in hermetic environments where
+it is absent (conftest installs it into ``sys.modules`` only on
+ModuleNotFoundError).  Examples are drawn from a PRNG seeded by the test
+name, so runs are deterministic; there is no shrinking — the failing
+example is reported as-is.
+"""
+from __future__ import annotations
+
+import functools
+import hashlib
+import inspect
+import random as _random
+
+DEFAULT_MAX_EXAMPLES = 20
+
+
+class _Strategy:
+    def __init__(self, draw_fn):
+        self._draw_fn = draw_fn
+
+    def draw(self, rng: _random.Random):
+        return self._draw_fn(rng)
+
+
+class strategies:
+    @staticmethod
+    def integers(min_value, max_value):
+        return _Strategy(lambda r: r.randint(min_value, max_value))
+
+    @staticmethod
+    def floats(min_value, max_value, **_kw):
+        return _Strategy(lambda r: r.uniform(min_value, max_value))
+
+    @staticmethod
+    def sampled_from(options):
+        opts = list(options)
+        return _Strategy(lambda r: r.choice(opts))
+
+
+def settings(max_examples=None, deadline=None, **_kw):
+    del deadline
+    def deco(fn):
+        fn._mini_hyp_max_examples = max_examples or DEFAULT_MAX_EXAMPLES
+        return fn
+    return deco
+
+
+def given(**strats):
+    for k, s in strats.items():
+        assert isinstance(s, _Strategy), (k, s)
+
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_mini_hyp_max_examples",
+                        DEFAULT_MAX_EXAMPLES)
+            seed = int(hashlib.sha1(
+                fn.__qualname__.encode()).hexdigest()[:8], 16)
+            rng = _random.Random(seed)
+            for i in range(n):
+                drawn = {k: s.draw(rng) for k, s in strats.items()}
+                try:
+                    fn(*args, **drawn, **kwargs)
+                except Exception as e:
+                    raise AssertionError(
+                        f"mini-hypothesis falsified {fn.__qualname__} on "
+                        f"example {i}: {drawn!r}") from e
+
+        # hide the drawn params from pytest's fixture resolution (real
+        # hypothesis rewrites the signature the same way)
+        sig = inspect.signature(fn)
+        remaining = [p for name, p in sig.parameters.items()
+                     if name not in strats]
+        wrapper.__signature__ = sig.replace(parameters=remaining)
+        del wrapper.__wrapped__
+        return wrapper
+    return deco

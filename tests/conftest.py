@@ -10,6 +10,17 @@ import pytest
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
+try:                                    # real hypothesis when installed …
+    import hypothesis  # noqa: F401
+except ModuleNotFoundError:             # … else the deterministic shim
+    try:
+        import _mini_hypothesis as _mh          # tests/ on sys.path
+    except ModuleNotFoundError:
+        from tests import _mini_hypothesis as _mh  # repo root on sys.path
+
+    sys.modules["hypothesis"] = _mh
+    sys.modules["hypothesis.strategies"] = _mh.strategies
+
 
 def run_py(code: str, devices: int = 0, timeout: int = 600) -> str:
     """Run a python snippet in a subprocess (optionally with N fake
