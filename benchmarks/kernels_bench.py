@@ -30,6 +30,45 @@ def main():
     ok = set(np.asarray(gi)) == ref_idx
     row("kernels/global_topk_64k", us, f"exact={'yes' if ok else 'NO'}")
 
+    # DGC sampled-threshold estimator (feeds the approximate EF kernel)
+    k = 655                                   # ~1% of 64k
+    us = time_call(lambda: ops.estimate_threshold(x, k))
+    tau = float(ops.estimate_threshold(x, k))
+    exact = float(np.sort(np.abs(np.asarray(x)))[-k])
+    row("kernels/estimate_threshold_64k", us,
+        f"tau_ratio={tau / exact:.3f}")
+
+    # segmented sweep: per-leaf exact top-k of a multi-leaf layout in ONE
+    # launch (the topk_backend="fused" hot path)
+    from repro.core import sparsify as SP
+    layout = SP.build_layout(
+        {"embed": {"w": jnp.zeros((64, 32))},
+         "layer1": {"w": jnp.zeros((128, 128)), "b": jnp.zeros((128,))},
+         "layer2": {"w": jnp.zeros((128, 128))},
+         "lm_head": {"w": jnp.zeros((32, 64))}}, sparsity=0.02)
+    v = jax.random.normal(jax.random.PRNGKey(6), (layout.n_total,))
+    sel_fused = jax.jit(lambda x: SP.select_topk(x, layout,
+                                                 backend="fused"))
+    us = time_call(lambda: sel_fused(v))
+    vf, idf = sel_fused(v)
+    vr, idr = SP.select_topk(v, layout, backend="jnp")
+    ok = np.array_equal(np.asarray(idf), np.asarray(idr)) and \
+        np.allclose(np.asarray(vf), np.asarray(vr), atol=1e-6)
+    row("kernels/segmented_topk_35k", us, f"exact={'yes' if ok else 'NO'}")
+
+    # fused EF + segmented selection (one launch, one read/write pass)
+    u = jax.random.normal(jax.random.PRNGKey(7), (layout.n_total,)) * 0.1
+    vv = jax.random.normal(jax.random.PRNGKey(8), (layout.n_total,)) * 0.2
+    gg = jax.random.normal(jax.random.PRNGKey(9), (layout.n_total,))
+    sweep = jax.jit(lambda a, b, c: SP.fused_accumulate_select(
+        a, b, c, layout, 0.9))
+    us = time_call(lambda: sweep(gg, u, vv))
+    u2, v2, _, _, _, _ = sweep(gg, u, vv)
+    ur, vr2 = SP.momentum_correct(u, vv, gg, 0.9)
+    err = max(float(jnp.max(jnp.abs(u2 - ur))),
+              float(jnp.max(jnp.abs(v2 - vr2))))
+    row("kernels/fused_ef_topk_35k", us, f"max_err={err:.1e}")
+
     from repro.core.autoencoder import init_lgc_autoencoder, lgc_encode
     ae = init_lgc_autoencoder(jax.random.PRNGKey(4))
     gvec = jax.random.normal(jax.random.PRNGKey(5), (16384,))

@@ -20,6 +20,10 @@ MODULES = [
     "fig14_ae_convergence",
     "kernels_bench",
     "transports_bench",
+    # last on purpose: writes BENCH_step_latency.json and raises
+    # SystemExit on backend divergence (the CI gate), which would abort
+    # the module loop
+    "step_latency_bench",
 ]
 
 

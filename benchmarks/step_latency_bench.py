@@ -1,0 +1,109 @@
+"""End-to-end compress-step latency: a full ``sim_step`` for every
+method (the five paper methods + the beyond-paper lgc_rar_q8; the
+dense "none" baseline as a single reference row) x {jnp, pallas, fused}
+selection backends (plus the ``ae_backend="pallas"`` phase-3 encoder
+for the LGC methods), written to
+``BENCH_step_latency.json`` — the machine-readable perf trajectory the
+ROADMAP tracks PR-over-PR.
+
+Doubles as a correctness gate (run by scripts/ci.sh): every kernel
+backend's global gradient and accumulator states are compared against
+the jnp oracle over the full phase schedule and the process exits
+nonzero if any divergence exceeds 1e-5.
+
+Timings are interpret-mode on CPU, so the *absolute* numbers are
+structural (launch counts, pass structure), not TPU wall-clock; the
+derived ``max_err_vs_jnp`` column is exact either way.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import row, time_call
+from repro.configs.base import CompressionConfig
+from repro.core import build_compressor
+from repro.core.phases import phase_for_step
+
+PARAMS = {
+    "embed": {"w": jnp.zeros((128, 64))},
+    "layer1": {"w": jnp.zeros((160, 160)), "b": jnp.zeros((160,))},
+    "layer2": {"w": jnp.zeros((160, 160))},
+    "lm_head": {"w": jnp.zeros((64, 128))},
+}
+K = 4
+METHODS = ("none", "sparse_gd", "dgc", "lgc_ps", "lgc_rar", "lgc_rar_q8")
+BACKENDS = ("jnp", "pallas", "fused")
+STEPS = 4                       # warmup(1) -> topk+AE(2) -> compressed
+TOL = 1e-5
+
+
+def run_method(method: str, backend: str, ae_backend: str = "jnp"):
+    """Full phase schedule; returns (stacked global grads, final u, v,
+    us_per_step of the steady-state last-phase step)."""
+    cc = CompressionConfig(method=method, sparsity=0.02,
+                           innovation_sparsity=0.002, warmup_steps=1,
+                           ae_train_steps=2, topk_backend=backend,
+                           ae_backend=ae_backend)
+    comp = build_compressor(cc, PARAMS, K)
+    n = comp.layout.n_total
+    states = comp.init_sim_states(jax.random.PRNGKey(0))
+    rng = jax.random.PRNGKey(1)
+    gs = []
+    for step in range(STEPS):
+        rng, k2 = jax.random.split(rng)
+        g = jax.random.normal(k2, (K, n)) * 0.01
+        gg, states, _ = comp.sim_step(states, g, step,
+                                      phase_for_step(step, cc))
+        gs.append(gg)
+    # steady state: time the last phase's jitted step on fixed inputs
+    phase = phase_for_step(STEPS - 1, cc)
+    step_fn = jax.jit(lambda st, gn, i: comp.sim_step(st, gn, i, phase))
+    g = jax.random.normal(jax.random.PRNGKey(2), (K, n)) * 0.01
+    us = time_call(lambda: step_fn(states, g, STEPS - 1))
+    return jnp.stack(gs), states["u"], states["v"], us
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out", default="BENCH_step_latency.json")
+    # tolerate foreign flags when run via benchmarks.run's module loop
+    args, _ = p.parse_known_args(argv)
+
+    report = {"K": K, "steps": STEPS, "tol": TOL, "methods": {}}
+    failures = []
+    for method in METHODS:
+        oracle = run_method(method, "jnp")
+        # "none" never touches a selection kernel: one baseline row only
+        variants = [("jnp", "jnp", "jnp")] if method == "none" \
+            else [(b, "jnp", b) for b in BACKENDS]
+        if method.startswith("lgc"):
+            # phase-3 encoder kernel gated against the same oracle
+            variants.append(("fused", "pallas", "fused_ae_pallas"))
+        entry = {}
+        for backend, ae_backend, label in variants:
+            res = oracle if (backend, ae_backend) == ("jnp", "jnp") \
+                else run_method(method, backend, ae_backend)
+            gs, u, v, us = res
+            err = max(float(jnp.max(jnp.abs(a - b)))
+                      for a, b in zip(oracle[:3], (gs, u, v)))
+            entry[label] = {"us_per_step": round(us, 1),
+                            "max_err_vs_jnp": err}
+            row(f"step_latency/{method}_{label}", us,
+                f"max_err={err:.1e}")
+            if err > TOL:
+                failures.append((method, label, err))
+        report["methods"][method] = entry
+
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=1)
+    print(f"wrote {args.out}")
+    if failures:
+        raise SystemExit(f"backend divergence beyond {TOL}: {failures}")
+
+
+if __name__ == "__main__":
+    main()

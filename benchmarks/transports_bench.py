@@ -43,7 +43,7 @@ def main():
             f"finite={'yes' if finite else 'NO'}")
 
     # selection backends on the hot path
-    for backend in ("jnp", "pallas"):
+    for backend in ("jnp", "pallas", "fused"):
         comp = build_compressor(
             CompressionConfig(method="dgc", sparsity=0.01,
                               topk_backend=backend), PARAMS, K)

@@ -1,5 +1,6 @@
 #!/usr/bin/env bash
-# CI smoke gate: pinned deps, tier-1 tests, kernel micro-bench, and the
+# CI smoke gate: pinned deps, tier-1 tests, kernel micro-bench, the
+# step-latency bench (perf trajectory + fused-vs-jnp 1e-5 gate), and the
 # end-to-end LGC train smoke on 2 fake devices (both transports).
 #
 #   scripts/ci.sh [--no-install]
@@ -16,7 +17,10 @@ echo "=== tier-1 tests ==="
 python -m pytest -x -q
 
 echo "=== kernel micro-benchmarks (correctness-gated) ==="
-python benchmarks/kernels_bench.py
+python -m benchmarks.kernels_bench
+
+echo "=== step-latency bench (fused/pallas gated vs jnp oracle at 1e-5) ==="
+python -m benchmarks.step_latency_bench --out BENCH_step_latency.json
 
 echo "=== LGC end-to-end smoke (mesh + ring transports) ==="
 for transport in mesh ring; do

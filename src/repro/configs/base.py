@@ -174,11 +174,18 @@ class CompressionConfig:
     # repro.dist.collectives).  The single-host emulation transport
     # ("sim") is selected via GradientCompressor.sim_step, not here.
     transport: str = "mesh"
-    # residual top-k selection backend: "jnp" (lax.top_k reference) or
-    # "pallas" (kernels/ops.global_topk).  topk_interpret=False runs the
-    # Pallas kernel compiled (real TPUs); True interprets it (CPU).
+    # residual top-k selection backend: "jnp" (lax.top_k reference),
+    # "pallas" (kernels/ops.global_topk, one launch per leaf) or "fused"
+    # (the single-sweep segmented kernel: EF accumulate + per-leaf
+    # selection of every exempt+compressed leaf in ONE launch — see
+    # DESIGN.md "The fused sparsification sweep").  topk_interpret=False
+    # runs ALL Pallas kernels — selection and the ae_backend encoder —
+    # compiled (real TPUs); True interprets them (CPU).
     topk_backend: str = "jnp"
     topk_interpret: bool = True
+    # phase-3 encoder backend: "jnp" (conv_general_dilated reference) or
+    # "pallas" (ops.lgc_encode_fast — im2col + fused MXU matmul kernel)
+    ae_backend: str = "jnp"
 
 
 @dataclass(frozen=True)

@@ -28,8 +28,12 @@ the :class:`repro.dist.transport.Transport` protocol.  The substrate —
 and call ``step`` — kept as the public API the launchers and tests use.
 
 Residual top-k selection dispatches on ``CompressionConfig.topk_backend``
-("jnp" reference vs the Pallas ``global_topk`` kernel), so the kernels in
-repro.kernels serve the training hot path, not just benchmarks.
+("jnp" reference, the per-leaf Pallas ``global_topk`` kernel, or "fused"
+— the single-sweep segmented kernel that folds the EF accumulate and the
+per-leaf selection of *all* exempt+compressed leaves into ONE launch),
+so the kernels in repro.kernels serve the training hot path, not just
+benchmarks.  Phase-3 encoding dispatches on ``ae_backend`` ("jnp" convs
+vs the MXU-backed ``ops.lgc_encode_fast``).
 
 State is a PyTree carried in the train state; all shapes static.
 """
@@ -89,9 +93,13 @@ class GradientCompressor:
 
     # -- per-node pieces -------------------------------------------------------
 
+    @property
+    def _use_momentum(self) -> bool:
+        # sparse_gd is plain residual accumulation, no momentum correction
+        return self.cc.method != "sparse_gd"
+
     def _accumulate(self, u, v, g):
-        if self.cc.method == "sparse_gd":
-            # plain residual accumulation, no momentum correction
+        if not self._use_momentum:
             return u, v + g
         return SP.momentum_correct(u, v, g, self.cc.momentum_correction)
 
@@ -99,6 +107,27 @@ class GradientCompressor:
         return SP.select_topk(v, self.layout,
                               backend=self.cc.topk_backend,
                               interpret=self.cc.topk_interpret)
+
+    def _select_last(self, v):
+        return SP.select_topk_last(v, self.layout,
+                                   backend=self.cc.topk_backend,
+                                   interpret=self.cc.topk_interpret)
+
+    def _fused_sweep(self, u, v, g):
+        """One-launch accumulate + select over compressed AND exempt-last
+        leaves (topk_backend="fused")."""
+        return SP.fused_accumulate_select(
+            g, u, v, self.layout, self.cc.momentum_correction,
+            use_momentum=self._use_momentum,
+            interpret=self.cc.topk_interpret)
+
+    def _encode(self, ae, x):
+        assert self.cc.ae_backend in ("jnp", "pallas"), self.cc.ae_backend
+        if self.cc.ae_backend == "pallas":
+            from repro.kernels import ops as K_ops
+            return K_ops.lgc_encode_fast(ae, x,
+                                         interpret=self.cc.topk_interpret)
+        return AE.lgc_encode(ae, x)[0]                   # (mu/16, 4)
 
     # -- quantization (beyond-paper) -------------------------------------------
 
@@ -167,29 +196,39 @@ class GradientCompressor:
         if phase == PHASE_WARMUP or cc.method == "none":
             return t.mean(g), state, stats
 
-        u, v = t.pernode(self._accumulate, in_axes=(0, 0, 0))(
-            state["u"], state["v"], g)
+        fused = cc.topk_backend == "fused"
+        if fused:
+            # ONE kernel sweep: EF accumulate + segmented selection over
+            # compressed AND exempt-last leaves (one HBM read/write pass
+            # instead of three, one launch instead of one per leaf)
+            u, v, f_vals, f_idx, last_vals, last_idx = t.pernode(
+                self._fused_sweep, in_axes=(0, 0, 0))(
+                    state["u"], state["v"], g)
+        else:
+            u, v = t.pernode(self._accumulate, in_axes=(0, 0, 0))(
+                state["u"], state["v"], g)
+            # exempt last layer: top-k values+indices exchanged sparsely
+            last_vals, last_idx = t.pernode(self._select_last)(v)
 
         # exempt-dense part: reduce ONLY the dense segments (not an
         # n-length mostly-zero vector — that would put dense-gradient
         # traffic back on the wire)
         dense_seg = t.pernode(lambda gg: SP.dense_segments(gg, layout))(g)
         g_dense = SP.scatter_dense_segments(t.mean(dense_seg), layout, n)
-        # exempt last layer: top-k values+indices exchanged sparsely
-        last_vals, last_idx = t.pernode(
-            lambda vv: SP.select_topk_last(vv, layout))(v)
         last_global = t.sparse_mean(last_vals, last_idx, n)
 
-        def clear(uu, vv, ii):
-            return SP.clear_sent(uu, vv, ii, n)
-        clear_own = t.pernode(clear, in_axes=(0, 0, 0))      # per-node idx
-        clear_shared = t.pernode(clear, in_axes=(0, 0, None))  # global idx
+        # combined clear: compressed + exempt-last index sets zeroed in a
+        # single scatter pass over each accumulator (2 passes, not 4)
+        def clear2(uu, vv, ii, jj):
+            return SP.clear_sent_merged(uu, vv, ii, jj, n)
+        clear_own = t.pernode(clear2, in_axes=(0, 0, 0, 0))
+        clear_shared = t.pernode(clear2, in_axes=(0, 0, None, 0))
 
         if cc.method in ("sparse_gd", "dgc"):
-            vals, idx = t.pernode(self._select)(v)
+            vals, idx = (f_vals, f_idx) if fused \
+                else t.pernode(self._select)(v)
             global_g = t.sparse_mean(vals, idx, n) + g_dense + last_global
-            u, v = clear_own(u, v, idx)
-            u, v = clear_own(u, v, last_idx)
+            u, v = clear_own(u, v, idx, last_idx)
             return global_g, {**state, "u": u, "v": v}, stats
 
         # ---- LGC ----
@@ -205,7 +244,7 @@ class GradientCompressor:
             raise ValueError(f"unknown method {cc.method}")
 
         leader = step % self.K
-        _own_vals, own_idx = t.pernode(self._select)(v)
+        own_idx = f_idx if fused else t.pernode(self._select)(v)[1]
         idx = t.from_leader(own_idx, leader)                 # global (mu_pad,)
         vals = t.pernode(SP.gather_at, in_axes=(0, None))(v, idx)  # per-node
 
@@ -227,14 +266,13 @@ class GradientCompressor:
                                                   inno_nodes, step,
                                                   t.ae_axes)
             stats["ae_loss"] = ae_loss
-            u, v = clear_shared(u, v, idx)
-            u, v = clear_own(u, v, last_idx)
+            u, v = clear_shared(u, v, idx, last_idx)
             return global_g, {**state, "u": u, "v": v, "ae": ae,
                               "ae_mom": ae_mom}, stats
 
         # phase 3 (compressed): encode -> move -> decode
         def encode(x):
-            return AE.lgc_encode(state["ae"], x)[0]          # (mu/16, 4)
+            return self._encode(state["ae"], x)              # (mu/16, 4)
 
         if is_ps:
             # Fig. 8: the leader worker ships E_c(g~); every worker ships
@@ -254,8 +292,7 @@ class GradientCompressor:
             rec_dense = SP.scatter_to_dense(rec, idx, n)
 
         global_g = rec_dense + g_dense + last_global
-        u, v = clear_shared(u, v, idx)
-        u, v = clear_own(u, v, last_idx)
+        u, v = clear_shared(u, v, idx, last_idx)
         return global_g, {**state, "u": u, "v": v}, stats
 
     # ==========================================================================

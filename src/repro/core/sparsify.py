@@ -16,9 +16,15 @@ stride-2 conv stack is shape-exact).
 All functions operate on the *flat* gradient vector (leaf tensors raveled
 and concatenated with static offsets), so they are jit-friendly with fully
 static shapes.
+
+Selection dispatches on a backend ("jnp" | "pallas" | "fused"); the
+"fused" path (:func:`fused_accumulate_select`) folds the EF accumulate
+and the per-leaf selection of every selectable leaf into ONE segmented
+Pallas sweep — see DESIGN.md "The fused sparsification sweep".
 """
 from __future__ import annotations
 
+import functools
 from dataclasses import dataclass
 from typing import Callable, List, Sequence, Tuple
 
@@ -26,6 +32,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels.segmented_topk import BLOCK as _SEG_BLOCK
 from repro.utils.tree import keystr_path
 
 ROLE_DENSE = "dense"            # exempt: raw dense gradient (first layer)
@@ -117,6 +124,18 @@ def clear_sent(u: jnp.ndarray, v: jnp.ndarray, indices: jnp.ndarray,
     return u, v
 
 
+def clear_sent_merged(u: jnp.ndarray, v: jnp.ndarray, idx_a: jnp.ndarray,
+                      idx_b: jnp.ndarray, n: int
+                      ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """clear_sent over idx_a ∪ idx_b as ONE combined scatter per
+    accumulator: 2 passes over (u, v) instead of the 4 that two separate
+    clear_sent calls cost.  The index sets are disjoint in the compressor
+    (compressed vs exempt-last leaves), but overlap would be harmless —
+    both scatters write the same 0."""
+    cat = jnp.concatenate([idx_a.astype(jnp.int32), idx_b.astype(jnp.int32)])
+    return clear_sent(u, v, cat, n)
+
+
 # ---------------------------------------------------------------------------
 # top-k selection per leaf (static shapes)
 
@@ -141,24 +160,97 @@ def _leaf_topk_pallas(seg: jnp.ndarray, k: int, offset: int,
     return vals, idx + offset
 
 
-SELECT_BACKENDS = ("jnp", "pallas")
+SELECT_BACKENDS = ("jnp", "pallas", "fused")
+
+# segmented-sweep minimum block size: the kernel's tile constant is the
+# single source of truth (one (8, 128) f32 VMEM tile).  The actual block
+# is scaled per layout — see _fused_block.
+FUSED_BLOCK = _SEG_BLOCK
+# VMEM ceiling for the scaled block: the fused kernel keeps ~6
+# block-sized f32/int32 tiles resident per grid step (~24*block bytes),
+# so 128Ki elements ≈ 3 MiB — safely under a TPU core's ~16 MiB when
+# compiled (interpret=False)
+FUSED_BLOCK_MAX = 128 * 1024
 
 
-def select_topk(v: jnp.ndarray, layout: GradientLayout,
-                backend: str = "jnp", interpret: bool = True):
-    """Top-k per compressed leaf of the residual vector ``v``.
+def _fused_block(slots) -> int:
+    """Per-layout sweep block size.  Exact block-local selection must keep
+    min(k, block) candidates per block (pigeonhole), so with the default
+    tile a leaf with k >= 1024 would make EVERY element a candidate.
+    Scaling the block to >= 8*k_max keeps the candidate pool <= ~n/8 and
+    the per-block extraction loop <= ~block/8 iterations — the same
+    k-iterations-per-block shape as block_topk/global_topk.  Capped at
+    FUSED_BLOCK_MAX to bound VMEM; past that k the pool bound degrades
+    gracefully (correctness is unaffected — n_cand stays exact)."""
+    k_max = max((l.k for l in slots), default=1)
+    want = -(-8 * k_max // FUSED_BLOCK) * FUSED_BLOCK
+    return max(FUSED_BLOCK, min(FUSED_BLOCK_MAX, want))
 
-    ``backend`` picks the selection implementation: "jnp" (lax.top_k
-    reference) or "pallas" (the block-local top-k kernel; pass
-    ``interpret=False`` on real TPUs).  Both are exact and return the
-    same ordering for distinct magnitudes.
 
-    Returns (values (mu_pad,), indices (mu_pad,) int32).  Padding entries
-    carry value 0 and sentinel index n_total (dropped by scatters).
-    """
-    assert backend in SELECT_BACKENDS, backend
+@functools.lru_cache(maxsize=64)
+def _fused_meta(layout: GradientLayout, roles: Tuple[str, ...]):
+    """Static segmented-sweep metadata for ``layout``: the block size,
+    the element->slot map (numpy, becomes a trace-time constant),
+    per-slot top-k caps, and the exact per-block candidate budget (worst
+    case over blocks of sum_slots min(k_slot, |slot piece in block|) —
+    the pigeonhole bound that makes the merged result exact)."""
+    slots = tuple(l for role in roles for l in layout.leaves
+                  if l.role == role)
+    block = _fused_block(slots)
+    n_pad = -(-layout.n_total // block) * block
+    seg = np.full((n_pad,), -1, np.int32)
+    for j, leaf in enumerate(slots):
+        seg[leaf.offset:leaf.offset + leaf.size] = j
+    kcap = np.asarray([l.k for l in slots], np.int32)
+    # per-block candidate budget: each slot's piece size in block b is a
+    # range overlap, so the budget is computed analytically per slot
+    # (vectorized over the blocks it spans) — no O(n) scan
+    budget = np.zeros((n_pad // block,), np.int64)
+    for leaf in slots:
+        b0 = leaf.offset // block
+        b1 = (leaf.offset + leaf.size - 1) // block
+        bs = np.arange(b0, b1 + 1)
+        pieces = (np.minimum(leaf.offset + leaf.size, (bs + 1) * block)
+                  - np.maximum(leaf.offset, bs * block))
+        budget[b0:b1 + 1] += np.minimum(pieces, leaf.k)
+    n_cand = max(1, int(budget.max(initial=0)))
+    return block, seg[:layout.n_total], kcap, n_cand, slots
+
+
+def _merge_candidates(cvals, cidx, cseg, slots):
+    """Exact per-slot top-k from the one-sweep candidate pool.  The
+    per-leaf lax.top_k here runs over the tiny candidate arrays
+    (n_blocks*n_cand elements, VMEM-scale), not the full vector — the
+    same merge shape ops.global_topk uses."""
+    mags = jnp.abs(cvals)
     vals_list, idx_list = [], []
-    for leaf in layout.compressed:
+    for j, leaf in enumerate(slots):
+        m = jnp.where(cseg == j, mags, -1.0)
+        _, top = jax.lax.top_k(m, leaf.k)
+        vals_list.append(cvals[top])
+        idx_list.append(cidx[top].astype(jnp.int32))
+    return vals_list, idx_list
+
+
+def _fused_select_lists(v: jnp.ndarray, layout: GradientLayout,
+                        roles: Tuple[str, ...], interpret: bool):
+    """Per-leaf (vals, idx) lists for all leaves of ``roles`` via ONE
+    segmented-sweep kernel launch."""
+    from repro.kernels import ops as K_ops
+    block, seg, kcap, n_cand, slots = _fused_meta(layout, roles)
+    if not slots:
+        return [], []
+    cv, ci, cs = K_ops.segmented_topk(v, jnp.asarray(seg),
+                                      jnp.asarray(kcap), n_cand=n_cand,
+                                      block=block, interpret=interpret)
+    return _merge_candidates(cv, ci, cs, slots)
+
+
+def _per_leaf_select(v, leaves, backend, interpret):
+    """Per-leaf (vals, idx) lists via one dynamic_slice + top-k per leaf
+    (the "jnp" and "pallas" backends)."""
+    vals_list, idx_list = [], []
+    for leaf in leaves:
         seg = jax.lax.dynamic_slice_in_dim(v, leaf.offset, leaf.size)
         if backend == "pallas":
             vals, idx = _leaf_topk_pallas(seg, leaf.k, leaf.offset,
@@ -167,40 +259,104 @@ def select_topk(v: jnp.ndarray, layout: GradientLayout,
             vals, idx = _leaf_topk(seg, leaf.k, leaf.offset)
         vals_list.append(vals)
         idx_list.append(idx)
+    return vals_list, idx_list
+
+
+def _pad_compressed(vals_list, idx_list, layout, dtype):
     pad = layout.mu_pad - layout.mu
     if pad:
-        vals_list.append(jnp.zeros((pad,), v.dtype))
-        idx_list.append(jnp.full((pad,), layout.n_total, jnp.int32))
+        vals_list = vals_list + [jnp.zeros((pad,), dtype)]
+        idx_list = idx_list + [jnp.full((pad,), layout.n_total, jnp.int32)]
     return (jnp.concatenate(vals_list),
             jnp.concatenate(idx_list).astype(jnp.int32))
 
 
-def select_topk_last(v: jnp.ndarray, layout: GradientLayout):
-    """Top-k over the exempt last layer(s) (sent raw, no AE)."""
+def select_topk(v: jnp.ndarray, layout: GradientLayout,
+                backend: str = "jnp", interpret: bool = True):
+    """Top-k per compressed leaf of the residual vector ``v``.
+
+    ``backend`` picks the selection implementation: "jnp" (lax.top_k
+    reference), "pallas" (the block-local top-k kernel, one launch per
+    leaf) or "fused" (the segmented sweep in kernels/segmented_topk.py,
+    ONE launch for the whole vector).  All are exact and return the same
+    ordering (ties break lowest-index-first).  Pass ``interpret=False``
+    on real TPUs.
+
+    Returns (values (mu_pad,), indices (mu_pad,) int32).  Padding entries
+    carry value 0 and sentinel index n_total (dropped by scatters).
+    """
+    assert backend in SELECT_BACKENDS, backend
+    if backend == "fused":
+        vals_list, idx_list = _fused_select_lists(
+            v, layout, (ROLE_COMPRESSED,), interpret)
+    else:
+        vals_list, idx_list = _per_leaf_select(v, layout.compressed,
+                                               backend, interpret)
+    return _pad_compressed(vals_list, idx_list, layout, v.dtype)
+
+
+def select_topk_last(v: jnp.ndarray, layout: GradientLayout,
+                     backend: str = "jnp", interpret: bool = True):
+    """Top-k over the exempt last layer(s) (sent raw, no AE), through the
+    same backend dispatch as :func:`select_topk`."""
+    assert backend in SELECT_BACKENDS, backend
     if not layout.topk_only:
         return (jnp.zeros((0,), v.dtype), jnp.zeros((0,), jnp.int32))
-    vals_list, idx_list = [], []
-    for leaf in layout.topk_only:
-        seg = jax.lax.dynamic_slice_in_dim(v, leaf.offset, leaf.size)
-        vals, idx = _leaf_topk(seg, leaf.k, leaf.offset)
-        vals_list.append(vals)
-        idx_list.append(idx)
+    if backend == "fused":
+        vals_list, idx_list = _fused_select_lists(
+            v, layout, (ROLE_TOPK_ONLY,), interpret)
+    else:
+        vals_list, idx_list = _per_leaf_select(v, layout.topk_only,
+                                               backend, interpret)
     return (jnp.concatenate(vals_list),
             jnp.concatenate(idx_list).astype(jnp.int32))
 
 
-def dense_part(g: jnp.ndarray, layout: GradientLayout) -> jnp.ndarray:
-    """Zero everywhere except the exempt dense leaves."""
-    mask = np.zeros((layout.n_total,), np.float32)
-    for leaf in layout.dense:
-        mask[leaf.offset:leaf.offset + leaf.size] = 1.0
-    return g * jnp.asarray(mask)
+def fused_accumulate_select(g: jnp.ndarray, u: jnp.ndarray, v: jnp.ndarray,
+                            layout: GradientLayout, momentum: float,
+                            use_momentum: bool = True,
+                            interpret: bool = True):
+    """THE fused hot path (``topk_backend="fused"``): one kernel sweep
+    does the EF accumulate (u' = m*u + g, v' = v + u'; plain residual
+    accumulation when ``use_momentum=False``) AND the segmented top-k
+    over compressed *and* topk_only leaves.
+
+    Returns (u', v', vals (mu_pad,), idx (mu_pad,), last_vals (k_last,),
+    last_idx (k_last,)) — exactly what momentum_correct + select_topk +
+    select_topk_last produce in ~6 full-length HBM passes and one kernel
+    launch per leaf, in one read of (g, u, v) and one write of (u', v').
+    """
+    roles = (ROLE_COMPRESSED, ROLE_TOPK_ONLY)
+    block, seg, kcap, n_cand, slots = _fused_meta(layout, roles)
+    if not slots:                        # degenerate: nothing selectable
+        # (no compressed and no topk_only leaves => mu_pad == k_last == 0)
+        if use_momentum:
+            u2, v2 = momentum_correct(u, v, g, momentum)
+        else:
+            u2, v2 = u, v + g
+        empty = (jnp.zeros((0,), v.dtype), jnp.zeros((0,), jnp.int32))
+        return (u2, v2) + empty + empty
+    from repro.kernels import ops as K_ops
+    u2, v2, cv, ci, cs = K_ops.fused_ef_topk(
+        g, u, v, jnp.asarray(seg), jnp.asarray(kcap), momentum,
+        bool(use_momentum), n_cand, block=block, interpret=interpret)
+    vals_list, idx_list = _merge_candidates(cv, ci, cs, slots)
+    nc = len(layout.compressed)
+    vals, idx = _pad_compressed(vals_list[:nc], idx_list[:nc], layout,
+                                v.dtype)
+    if layout.topk_only:
+        last_vals = jnp.concatenate(vals_list[nc:])
+        last_idx = jnp.concatenate(idx_list[nc:]).astype(jnp.int32)
+    else:
+        last_vals = jnp.zeros((0,), v.dtype)
+        last_idx = jnp.zeros((0,), jnp.int32)
+    return u2, v2, vals, idx, last_vals, last_idx
 
 
 def dense_segments(g: jnp.ndarray, layout: GradientLayout) -> jnp.ndarray:
     """Concatenate ONLY the exempt-dense leaf segments (so the cross-node
-    reduction moves sum(dense sizes) floats, not n — psum'ing the
-    dense_part vector would put n-float traffic on the wire and defeat
+    reduction moves sum(dense sizes) floats, not n — psum'ing a masked
+    full-length vector would put n-float traffic on the wire and defeat
     the compression)."""
     if not layout.dense:
         return jnp.zeros((0,), g.dtype)

@@ -18,7 +18,10 @@ import numpy as np
 
 from repro.kernels import block_topk as _bt
 from repro.kernels import matmul_lrelu as _mm
+from repro.kernels import segmented_topk as _st
 from repro.kernels import sparsify_ef as _ef
+
+SEG_BLOCK = _st.BLOCK
 
 
 def _pad_to(x, mult, value=0.0):
@@ -34,7 +37,8 @@ def _pad_to(x, mult, value=0.0):
 # fused error-feedback sparsification
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
+@functools.partial(jax.jit, static_argnames=("k", "sample_stride",
+                                             "interpret"))
 def estimate_threshold(v: jnp.ndarray, k: int, sample_stride: int = 32,
                        interpret: bool = True) -> jnp.ndarray:
     """DGC sampled-threshold on TPU: top-k over a strided VMEM-resident
@@ -86,6 +90,57 @@ def global_topk(x: jnp.ndarray, k: int, block: int = 64 * 128,
     mags = jnp.where(valid, jnp.abs(cand_vals), -1.0)
     _, top = jax.lax.top_k(mags, k)
     return cand_vals[top], cand_idx[top]
+
+
+# ---------------------------------------------------------------------------
+# segmented sweep: whole-vector per-leaf selection in ONE launch
+
+
+@functools.partial(jax.jit, static_argnames=("n_cand", "block", "interpret"))
+def segmented_topk(x: jnp.ndarray, seg: jnp.ndarray, kcap: jnp.ndarray,
+                   n_cand: int, block: int = SEG_BLOCK,
+                   interpret: bool = True):
+    """Candidate sweep over an arbitrary-length flat vector (auto-padded).
+
+    ``seg`` maps each element to a selection slot (-1 = not selectable),
+    ``kcap`` gives each slot's top-k cap, ``n_cand`` the per-block
+    candidate budget (see sparsify's layout metadata).  Returns flattened
+    (vals, idx, slot) candidate triples with idx in element coordinates
+    of ``x``; the exact per-slot top-k is a tiny lax.top_k merge over
+    these (core/sparsify._merge_candidates).
+    """
+    xp, _ = _pad_to(x, block)
+    segp, _ = _pad_to(seg, block, value=-1)
+    nb = xp.shape[0] // block
+    cv, ci, cs = _st.segmented_topk(xp.reshape(nb, block),
+                                    segp.reshape(nb, block), kcap, n_cand,
+                                    interpret=interpret)
+    return cv.reshape(-1), ci.reshape(-1), cs.reshape(-1)
+
+
+@functools.partial(jax.jit, static_argnames=("use_momentum", "n_cand",
+                                             "block", "interpret"))
+def fused_ef_topk(g, u, v, seg, kcap, momentum, use_momentum: bool,
+                  n_cand: int, block: int = SEG_BLOCK,
+                  interpret: bool = True):
+    """One-sweep EF accumulate + segmented top-k candidates (auto-padded).
+
+    u' = m*u + g, v' = v + u' (plain v + g when use_momentum=False) and
+    the per-slot candidate extraction of v', in a single kernel launch —
+    one HBM read of (g, u, v), one write of (u', v').
+    Returns (u', v', cand_vals, cand_idx, cand_seg).
+    """
+    n = g.shape[0]
+    gp, _ = _pad_to(g, block)
+    up, _ = _pad_to(u, block)
+    vp, _ = _pad_to(v, block)
+    segp, _ = _pad_to(seg, block, value=-1)
+    nb = gp.shape[0] // block
+    u2, v2, cv, ci, cs = _ef.sparsify_ef_topk(
+        gp.reshape(nb, block), up.reshape(nb, block), vp.reshape(nb, block),
+        segp.reshape(nb, block), kcap, jnp.asarray(momentum, jnp.float32),
+        use_momentum, n_cand, interpret=interpret)
+    return u2[:n], v2[:n], cv.reshape(-1), ci.reshape(-1), cs.reshape(-1)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,126 @@
+"""Segmented block-local top-k kernel (TPU Pallas).
+
+``global_topk`` (block_topk.py + the merge in ops.py) is exact top-k for
+ONE segment per kernel launch; the training hot path needs top-k per
+*leaf* of the flat gradient, which the jnp reference implements as a
+Python loop of dynamic_slice + lax.top_k — one kernel launch and one HBM
+round-trip per leaf.  This kernel restores the streaming shape of the
+problem: ONE grid sweep over the whole flat vector, with the static
+``GradientLayout`` baked in as a per-element segment-id array.  Each grid
+step loads one VMEM-sized block plus its segment ids and extracts, for
+every segment piece present in the block, that piece's top-min(k_seg,
+|piece|) candidates by |value| (a segment's global winners are a subset
+of its per-block winners by pigeonhole).  A tiny host-side merge
+(lax.top_k over the candidate pool, k·n_blocks-scale and VMEM-resident)
+finishes the exact per-segment result — see core/sparsify.py.
+
+The candidate loop is segment-aware: one (max -> record -> mask)
+iteration per candidate slot, masking a whole segment out of contention
+once its cap is reached, so a block straddling leaf boundaries cannot
+crowd a small leaf's winners out with a big leaf's values.  Tie-break
+(equal |value|) is lowest-index-first, matching lax.top_k's stable
+order, so the merged result is *identical* to the per-leaf reference —
+not just equivalent.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANE = 128
+BLOCK = 8 * LANE          # default sweep block: one (8, 128) f32 VMEM tile
+
+
+def select_candidates(x, seg, kcap, n_cand: int, block: int):
+    """Per-block segmented candidate extraction (runs inside a kernel).
+
+    x, seg: (block//LANE, LANE) VMEM-resident value / segment-id tiles
+    (seg < 0 = not selectable); kcap: (1, n_slots) per-slot top-k caps.
+    Returns (vals (n_cand,), idx (n_cand,) block-local, seg (n_cand,));
+    unused candidate slots carry (0, block, -1).
+    """
+    flat_idx = (jax.lax.broadcasted_iota(jnp.int32, x.shape, 0) * LANE
+                + jax.lax.broadcasted_iota(jnp.int32, x.shape, 1))
+    n_slots = kcap.shape[-1]
+    slot_iota = jax.lax.broadcasted_iota(jnp.int32, (1, n_slots), 1)
+    mag0 = jnp.where(seg >= 0, jnp.abs(x), -1.0)
+
+    def body(i, carry):
+        mag, counts, vals, idxs, segs = carry
+        m = jnp.max(mag)
+        valid = m >= 0.0                     # all-masked block => m == -1
+        pos = jnp.min(jnp.where(mag == m, flat_idx, block))
+        hit = (flat_idx == pos) & valid
+        val = jnp.sum(jnp.where(hit, x, 0.0))
+        s = jnp.where(valid, jnp.sum(jnp.where(hit, seg, 0)), -1)
+        one = slot_iota == s
+        counts = counts + one.astype(jnp.int32)
+        cap = jnp.sum(jnp.where(one, kcap, 0))
+        cnt = jnp.sum(jnp.where(one, counts, 0))
+        mag = jnp.where(hit, -1.0, mag)
+        # slot s reached its cap: its remaining elements can never win
+        mag = jnp.where((seg == s) & valid & (cnt >= cap), -1.0, mag)
+        vals = vals.at[i].set(val)
+        idxs = idxs.at[i].set(jnp.where(valid, pos, block))
+        segs = segs.at[i].set(s)
+        return mag, counts, vals, idxs, segs
+
+    carry = (mag0, jnp.zeros((1, n_slots), jnp.int32),
+             jnp.zeros((n_cand,), x.dtype),
+             jnp.full((n_cand,), block, jnp.int32),
+             jnp.full((n_cand,), -1, jnp.int32))
+    _, _, vals, idxs, segs = jax.lax.fori_loop(0, n_cand, body, carry)
+    return vals, idxs, segs
+
+
+def sweep_specs(rows: int, n_cand: int, n_slots: int):
+    """Shared pallas_call scaffolding for the segmented-sweep kernels
+    (this one and sparsify_ef.sparsify_ef_topk): per-block tile spec,
+    per-block candidate spec, broadcast kcap spec."""
+    tile = pl.BlockSpec((1, rows, LANE), lambda i: (i, 0, 0))
+    cand = pl.BlockSpec((1, n_cand), lambda i: (i, 0))
+    kcap = pl.BlockSpec((1, n_slots), lambda i: (0, 0))
+    return tile, cand, kcap
+
+
+def cand_out_shapes(n_blocks: int, n_cand: int, dtype):
+    """(vals, idx, seg) candidate output shapes for a sweep kernel."""
+    return [jax.ShapeDtypeStruct((n_blocks, n_cand), dtype),
+            jax.ShapeDtypeStruct((n_blocks, n_cand), jnp.int32),
+            jax.ShapeDtypeStruct((n_blocks, n_cand), jnp.int32)]
+
+
+def _kernel(x_ref, seg_ref, kcap_ref, vals_ref, idx_ref, seg_out_ref, *,
+            n_cand: int, block: int):
+    vals, idxs, segs = select_candidates(x_ref[0], seg_ref[0], kcap_ref[...],
+                                         n_cand, block)
+    base = pl.program_id(0) * block
+    vals_ref[0, :] = vals
+    idx_ref[0, :] = base + idxs
+    seg_out_ref[0, :] = segs
+
+
+@functools.partial(jax.jit, static_argnames=("n_cand", "interpret"))
+def segmented_topk(x: jnp.ndarray, seg: jnp.ndarray, kcap: jnp.ndarray,
+                   n_cand: int, interpret: bool = True):
+    """x, seg: (n_blocks, block) f32/int32, block % 128 == 0; kcap:
+    (n_slots,) int32 per-slot caps.  Returns per-block candidate triples
+    (vals (n_blocks, n_cand), idx (n_blocks, n_cand) in GLOBAL element
+    coordinates, seg (n_blocks, n_cand) slot id or -1 for unused)."""
+    n_blocks, block = x.shape
+    assert block % LANE == 0, block
+    rows = block // LANE
+    kern = functools.partial(_kernel, n_cand=n_cand, block=block)
+    tile, cand, kspec = sweep_specs(rows, n_cand, kcap.shape[0])
+    return pl.pallas_call(
+        kern,
+        grid=(n_blocks,),
+        in_specs=[tile, tile, kspec],
+        out_specs=[cand, cand, cand],
+        out_shape=cand_out_shapes(n_blocks, n_cand, x.dtype),
+        interpret=interpret,
+    )(x.reshape(n_blocks, rows, LANE), seg.reshape(n_blocks, rows, LANE),
+      kcap[None])

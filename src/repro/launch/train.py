@@ -34,11 +34,17 @@ def parse_args(argv=None):
                         "or the explicit chunked ring with measured wire "
                         "bytes (ring)")
     p.add_argument("--topk-backend", default="jnp",
+                   choices=["jnp", "pallas", "fused"],
+                   help="residual top-k selection backend (fused = the "
+                        "one-launch segmented accumulate+select sweep)")
+    p.add_argument("--ae-backend", default="jnp",
                    choices=["jnp", "pallas"],
-                   help="residual top-k selection backend")
+                   help="phase-3 encoder backend (pallas = im2col + "
+                        "fused MXU matmul kernel, ops.lgc_encode_fast)")
     p.add_argument("--topk-compiled", action="store_true",
-                   help="compile the Pallas selection kernel (real TPUs); "
-                        "default interprets it on CPU")
+                   help="compile ALL Pallas kernels — selection backends "
+                        "AND the --ae-backend pallas encoder (real TPUs); "
+                        "default interprets them on CPU")
     p.add_argument("--warmup-steps", type=int, default=10)
     p.add_argument("--ae-train-steps", type=int, default=15)
     p.add_argument("--optimizer", default="adamw",
@@ -90,6 +96,7 @@ def main(argv=None):
                            ae_train_steps=args.ae_train_steps,
                            transport=args.transport,
                            topk_backend=args.topk_backend,
+                           ae_backend=args.ae_backend,
                            topk_interpret=not args.topk_compiled)
     tc = TrainConfig(optimizer=args.optimizer, learning_rate=args.lr,
                      steps=args.steps, seed=args.seed, compression=cc)

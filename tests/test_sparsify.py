@@ -92,12 +92,20 @@ def test_innovation_is_subset_of_topk():
     assert (np.abs(inno[nz]) >= thresh - 1e-6).all()
 
 
-def test_dense_part_masks_exempt_layers():
-    g = jnp.ones((LAYOUT.n_total,))
-    d = np.asarray(SP.dense_part(g, LAYOUT))
+def test_dense_segments_roundtrip_masks_exempt_layers():
+    """dense_segments extracts ONLY the exempt-dense leaves (sum of dense
+    sizes on the wire, not n) and scatter_dense_segments restores them to
+    their flat offsets with zeros everywhere else."""
+    g = jax.random.normal(jax.random.PRNGKey(0), (LAYOUT.n_total,))
+    seg = SP.dense_segments(g, LAYOUT)
+    assert seg.shape == (sum(l.size for l in LAYOUT.dense),)
+    d = np.asarray(SP.scatter_dense_segments(seg, LAYOUT, LAYOUT.n_total))
+    gn = np.asarray(g)
     for leaf in LAYOUT.leaves:
-        seg = d[leaf.offset : leaf.offset + leaf.size]
+        got = d[leaf.offset : leaf.offset + leaf.size]
         if leaf.role == SP.ROLE_DENSE:
-            assert (seg == 1).all()
+            np.testing.assert_allclose(got,
+                                       gn[leaf.offset:leaf.offset
+                                          + leaf.size])
         else:
-            assert (seg == 0).all()
+            assert (got == 0).all()

@@ -180,27 +180,32 @@ print("PASS")
 # selection backends
 
 
+@pytest.mark.parametrize("backend", ["pallas", "fused"])
 @pytest.mark.parametrize("method", ["dgc", "lgc_rar"])
-def test_pallas_selection_backend_matches_jnp(method):
-    """Same layout, same residuals: the Pallas block-topk backend must
-    select the same (values, indices) as the lax.top_k reference, so
-    compressed training is bit-identical across backends."""
+def test_kernel_selection_backends_match_jnp(method, backend):
+    """Same layout, same residuals: the Pallas block-topk and fused
+    segmented-sweep backends must select the same (values, indices) as
+    the lax.top_k reference, so compressed training is bit-identical
+    across backends."""
     cc_j = _cc(method, topk_backend="jnp")
-    cc_p = _cc(method, topk_backend="pallas")
+    cc_b = _cc(method, topk_backend=backend)
     comp_j = build_compressor(cc_j, PARAMS, K)
-    comp_p = build_compressor(cc_p, PARAMS, K)
+    comp_b = build_compressor(cc_b, PARAMS, K)
     v = jax.random.normal(jax.random.PRNGKey(3), (comp_j.layout.n_total,))
     vj, ij = comp_j._select(v)
-    vp, ip = comp_p._select(v)
-    np.testing.assert_array_equal(np.asarray(ij), np.asarray(ip))
-    np.testing.assert_allclose(np.asarray(vj), np.asarray(vp), atol=1e-6)
+    vb, ib = comp_b._select(v)
+    np.testing.assert_array_equal(np.asarray(ij), np.asarray(ib))
+    np.testing.assert_allclose(np.asarray(vj), np.asarray(vb), atol=1e-6)
 
 
-def test_pallas_backend_full_sim_cycle_matches_jnp():
+@pytest.mark.parametrize("backend,ae_backend",
+                         [("pallas", "jnp"), ("fused", "jnp"),
+                          ("fused", "pallas")])
+def test_kernel_backend_full_sim_cycle_matches_jnp(backend, ae_backend):
     from repro.core.phases import phase_for_step
     outs = {}
-    for backend in ("jnp", "pallas"):
-        cc = _cc("lgc_rar", topk_backend=backend)
+    for b, ab in (("jnp", "jnp"), (backend, ae_backend)):
+        cc = _cc("lgc_rar", topk_backend=b, ae_backend=ab)
         comp = build_compressor(cc, PARAMS, K)
         states = comp.init_sim_states(jax.random.PRNGKey(0))
         rng = jax.random.PRNGKey(1)
@@ -211,17 +216,102 @@ def test_pallas_backend_full_sim_cycle_matches_jnp():
             gg, states, _ = comp.sim_step(states, g, step,
                                           phase_for_step(step, cc))
             gs.append(gg)
-        outs[backend] = jnp.stack(gs)
-    np.testing.assert_allclose(np.asarray(outs["jnp"]),
-                               np.asarray(outs["pallas"]), atol=1e-5)
+        outs[b] = (jnp.stack(gs), states["u"], states["v"])
+    for a, b_, name in zip(outs["jnp"], outs[backend], ("g", "u", "v")):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b_),
+                                   atol=1e-5, err_msg=name)
 
 
-def test_select_topk_pallas_matches_reference_per_leaf():
+def test_select_topk_kernel_backends_match_reference_per_leaf():
     layout = SP.build_layout(PARAMS, sparsity=0.05)
     for seed in range(3):
         v = jax.random.normal(jax.random.PRNGKey(seed), (layout.n_total,))
         vj, ij = SP.select_topk(v, layout, backend="jnp")
-        vp, ip = SP.select_topk(v, layout, backend="pallas")
-        np.testing.assert_array_equal(np.asarray(ij), np.asarray(ip))
-        np.testing.assert_allclose(np.asarray(vj), np.asarray(vp),
-                                   atol=1e-6)
+        for backend in ("pallas", "fused"):
+            vp, ip = SP.select_topk(v, layout, backend=backend)
+            np.testing.assert_array_equal(np.asarray(ij), np.asarray(ip))
+            np.testing.assert_allclose(np.asarray(vj), np.asarray(vp),
+                                       atol=1e-6)
+
+
+def test_fused_backend_all_methods_all_transports_match_jnp(subproc):
+    """The acceptance bar for the fused sweep: topk_backend="fused"
+    produces the same global gradients AND accumulator states as the jnp
+    reference (<= 1e-5) for every method, on Sim, Mesh and Ring, over the
+    full warmup -> topk+AE -> compressed phase schedule."""
+    out = subproc("""
+import jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from repro.configs.base import CompressionConfig
+from repro.core import build_compressor
+from repro.core.phases import phase_for_step
+
+params = {"embed": {"w": jnp.zeros((32, 16))},
+          "layer1": {"w": jnp.zeros((64, 64)), "b": jnp.zeros((64,))},
+          "layer2": {"w": jnp.zeros((64, 64))},
+          "lm_head": {"w": jnp.zeros((16, 32))}}
+K = 4
+mesh = jax.make_mesh((4,), ("data",),
+                     axis_types=(jax.sharding.AxisType.Auto,))
+
+def run_sim(comp, cc, n):
+    states = comp.init_sim_states(jax.random.PRNGKey(0))
+    rng = jax.random.PRNGKey(1)
+    gs = []
+    for step in range(4):
+        rng, k2 = jax.random.split(rng)
+        g = jax.random.normal(k2, (K, n)) * 0.01
+        gg, states, _ = comp.sim_step(states, g, step,
+                                      phase_for_step(step, cc))
+        gs.append(gg)
+    return jnp.stack(gs), states["u"], states["v"]
+
+def run_dist(comp, cc, n, transport):
+    base = comp.init_state(jax.random.PRNGKey(0))
+    ae_keys = tuple(k for k in ("ae", "ae_mom") if k in base)
+
+    def dist_fn(step, phase):
+        def inner(uv, ae_part, g):
+            state = {"u": uv["u"][0], "v": uv["v"][0], **ae_part}
+            gg, ns, _ = comp.dist_step(state, g[0], step, phase,
+                                       ("data",), transport=transport)
+            return (gg, {"u": ns["u"][None], "v": ns["v"][None]},
+                    {k: ns[k] for k in ae_part})
+        return jax.jit(jax.shard_map(
+            inner, mesh=mesh,
+            in_specs=({"u": P("data"), "v": P("data")}, P(), P("data")),
+            out_specs=(P(), {"u": P("data"), "v": P("data")}, P()),
+            axis_names={"data"}, check_vma=False))
+
+    uv = {"u": jnp.zeros((K, n)), "v": jnp.zeros((K, n))}
+    ae = {k: base[k] for k in ae_keys}
+    rng = jax.random.PRNGKey(1)
+    gs = []
+    for step in range(4):
+        rng, k2 = jax.random.split(rng)
+        g = jax.random.normal(k2, (K, n)) * 0.01
+        gg, uv, ae = dist_fn(step, phase_for_step(step, cc))(uv, ae, g)
+        gs.append(gg)
+    return jnp.stack(gs), uv["u"], uv["v"]
+
+for method in ["sparse_gd", "dgc", "lgc_rar", "lgc_rar_q8", "lgc_ps"]:
+    for transport in ("sim", "mesh", "ring"):
+        outs = {}
+        for backend in ("jnp", "fused"):
+            cc = CompressionConfig(method=method, sparsity=0.05,
+                                   innovation_sparsity=0.005,
+                                   warmup_steps=1, ae_train_steps=2,
+                                   topk_backend=backend)
+            comp = build_compressor(cc, params, K)
+            n = comp.layout.n_total
+            run = run_sim if transport == "sim" else run_dist
+            args = (comp, cc, n) if transport == "sim" \\
+                else (comp, cc, n, transport)
+            outs[backend] = run(*args)
+        for a, b, name in zip(outs["jnp"], outs["fused"], ("g", "u", "v")):
+            err = float(jnp.max(jnp.abs(a - b)))
+            assert err <= 1e-5, (method, transport, name, err)
+    print(method, "OK")
+print("PASS")
+""", devices=4, timeout=1800)
+    assert "PASS" in out
