@@ -41,7 +41,11 @@ def main():
                    "lgc_ps"):
         cc = CompressionConfig(method=method, sparsity=0.001,
                                innovation_sparsity=1e-5)
-        r = rate_report(cc, lay, K)
+        # q8's 1-byte encoding only exists on the int8 wire; price that
+        # row on ring_q8 (rate_report is transport-aware)
+        r = rate_report(cc, lay, K,
+                        transport="ring_q8" if method == "lgc_rar_q8"
+                        else None)
         tb = total_information_tb(r.bytes_per_node, K, ITERS)
         # latency on a 1/16-scale live compressor (CPU tractability)
         small = {"embed": {"w": jnp.zeros((9_408 // 16,))},

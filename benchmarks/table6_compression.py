@@ -52,12 +52,15 @@ def main():
         for method in METHODS:
             cc = CompressionConfig(method=method, sparsity=alpha,
                                    innovation_sparsity=alpha / 100)
+            # q8's 1-byte encoding only exists on the int8 wire; price
+            # that row on ring_q8 (rate_report is transport-aware)
+            tk = "ring_q8" if method == "lgc_rar_q8" else None
             t0 = time.perf_counter()
-            r = rate_report(cc, lay, K)
+            r = rate_report(cc, lay, K, transport=tk)
             # the paper's own accounting omits the exempt first layer's
             # dense gradient (its Table VI can't close otherwise — see
             # DESIGN.md §8b.1)
-            rp = rate_report(cc, lay, K, count_exempt=False)
+            rp = rate_report(cc, lay, K, count_exempt=False, transport=tk)
             us = (time.perf_counter() - t0) * 1e6
             row(f"table6/{name}/{method}", us,
                 f"CR_full={r.compression_ratio:.0f}x"

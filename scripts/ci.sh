@@ -1,7 +1,9 @@
 #!/usr/bin/env bash
 # CI smoke gate: pinned deps, tier-1 tests, kernel micro-bench, the
-# step-latency bench (perf trajectory + fused-vs-jnp 1e-5 gate), and the
-# end-to-end LGC train smoke on 2 fake devices (both transports).
+# step-latency bench (perf trajectory + fused-vs-jnp 1e-5 gate), the
+# transport gate (every transport in TRANSPORTS vs the Sim oracle:
+# mesh/ring/ring_hier exact, ring_q8 at the quantization tolerance), and
+# the end-to-end LGC train smoke on 2 fake devices (all transports).
 #
 #   scripts/ci.sh [--no-install]
 set -euo pipefail
@@ -22,11 +24,19 @@ python -m benchmarks.kernels_bench
 echo "=== step-latency bench (fused/pallas gated vs jnp oracle at 1e-5) ==="
 python -m benchmarks.step_latency_bench --out BENCH_step_latency.json
 
-echo "=== LGC end-to-end smoke (mesh + ring transports) ==="
-for transport in mesh ring; do
+echo "=== transport gate (mesh/ring/ring_hier exact, ring_q8 quant-tol) ==="
+python -m benchmarks.transports_bench
+
+echo "=== LGC end-to-end smoke (every distributed transport) ==="
+for transport in mesh ring ring_hier; do
     python -m repro.launch.train --arch llama3.2-1b --smoke --steps 12 \
         --batch 4 --seq 64 --compression lgc_rar --warmup-steps 2 \
         --ae-train-steps 4 --data-shards 2 --transport "$transport"
 done
+# the int8 wire end-to-end: lgc_rar_q8 on ring_q8 (the transport that
+# makes its 1-byte/value rate claim real)
+python -m repro.launch.train --arch llama3.2-1b --smoke --steps 12 \
+    --batch 4 --seq 64 --compression lgc_rar_q8 --warmup-steps 2 \
+    --ae-train-steps 4 --data-shards 2 --transport ring_q8
 
 echo "CI OK"

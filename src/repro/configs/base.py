@@ -169,11 +169,25 @@ class CompressionConfig:
     encode_quant_bits: int = 0       # beyond-paper: quantize encodings (0=off)
     exempt_first_last: bool = True   # paper Section VI-A layer exemption
     # communication substrate for the distributed step: "mesh" (lax
-    # collectives, XLA picks the allreduce algorithm) or "ring" (the
+    # collectives, XLA picks the allreduce algorithm), "ring" (the
     # paper's explicit chunked ring schedule, wire bytes measured by
-    # repro.dist.collectives).  The single-host emulation transport
-    # ("sim") is selected via GradientCompressor.sim_step, not here.
+    # repro.dist.collectives), "ring_q8" (ring whose compressed-payload
+    # reductions ship int8 values + per-block f32 scales — the transport
+    # that makes lgc_rar_q8's 1-byte/value rate claim real) or
+    # "ring_hier" (hierarchical intra-pod/inter-pod rings on multi-axis
+    # dp meshes; last mesh axis = intra-pod).  The single-host emulation
+    # transport ("sim") is selected via GradientCompressor.sim_step, not
+    # here.
     transport: str = "mesh"
+    # int8-wire scale granularity: one f32 scale per this many values
+    # (0 = repro.dist.quantize.SCALE_BLOCK).  Shared by the real wire
+    # (ring_q8) and the fake-quant path, so their numerics are comparable
+    # and rate.py's byte accounting matches the measured tally.
+    q8_scale_block: int = 0
+    # hierarchical-ring per-level message chunking, in elements
+    # (0 = one message per hop; bytes are unchanged either way)
+    ring_intra_chunk: int = 0
+    ring_inter_chunk: int = 0
     # residual top-k selection backend: "jnp" (lax.top_k reference),
     # "pallas" (kernels/ops.global_topk, one launch per leaf) or "fused"
     # (the single-sweep segmented kernel: EF accumulate + per-leaf

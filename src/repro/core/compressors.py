@@ -20,9 +20,16 @@ the :class:`repro.dist.transport.Transport` protocol.  The substrate —
   * ``RingTransport``  same context, but reductions take the explicit
     chunked ring schedule in repro.dist.collectives — the paper's
     ring-allreduce pattern with measured wire bytes.
+  * ``RingQ8Transport``  the int8 wire: ``lgc_rar_q8``'s encoding
+    reduction ships int8 values + per-block f32 scales through the ring
+    (quantize-forward), so the 1-byte/value rate claim is measured, not
+    fake.
+  * ``RingHierTransport``  hierarchical intra-pod/inter-pod rings on
+    multi-axis dp meshes.
   * ``SimTransport``   stacked (K, n) single-host arrays (the paper's own
     experiments emulate several nodes per GPU the same way).  Used by the
-    convergence benchmarks; tests assert sim == mesh == ring.
+    convergence benchmarks; tests assert sim == mesh == ring == ring_hier
+    (ring_q8 within the quantization bound).
 
 ``dist_step`` / ``sim_step`` are thin wrappers that build the transport
 and call ``step`` — kept as the public API the launchers and tests use.
@@ -51,7 +58,7 @@ from repro.configs.base import CompressionConfig
 from repro.core import autoencoder as AE
 from repro.core import sparsify as SP
 from repro.core.phases import (PHASE_COMPRESSED, PHASE_TOPK_AE, PHASE_WARMUP)
-from repro.dist.transport import SimTransport, Transport, make_transport
+from repro.dist.transport import Transport, make_transport
 
 Axis = Sequence[str]
 
@@ -128,17 +135,6 @@ class GradientCompressor:
             return K_ops.lgc_encode_fast(ae, x,
                                          interpret=self.cc.topk_interpret)
         return AE.lgc_encode(ae, x)[0]                   # (mu/16, 4)
-
-    # -- quantization (beyond-paper) -------------------------------------------
-
-    def _maybe_quantize(self, z):
-        if self.cc.method != "lgc_rar_q8":
-            return z
-        # symmetric per-tensor int8 fake-quant (dequantized domain so the
-        # all-reduce stays a float reduction of 1/4 the bytes when lowered
-        # with int8 transport; rate accounting uses 8 bits/val)
-        scale = jnp.maximum(jnp.max(jnp.abs(z)), 1e-12) / 127.0
-        return jnp.round(z / scale).clip(-127, 127) * scale
 
     # -- AE online training (phase 2, Section V-B) -----------------------------
 
@@ -284,10 +280,15 @@ class GradientCompressor:
             recs = AE.lgc_decode_ps(state["ae"], z_common, inno_nodes)
             rec_dense = SP.scatter_to_dense(recs.mean(0), idx, n)
         else:
-            # RAR (eq. 17-19): encode -> average (THE all-reduce) -> decode
+            # RAR (eq. 17-19): encode -> average (THE all-reduce) -> decode.
+            # lgc_rar_q8's encoding reduction rides the int8 wire: REAL on
+            # RingQ8Transport (quantize-forward ring, ~1 byte/value
+            # measured), fake-quantized through the same
+            # repro.dist.quantize module then reduced in f32 everywhere
+            # else — so Sim/Mesh/Ring == RingQ8 up to the wire's bounded
+            # requantization error.
             z = t.pernode(encode)(vals)
-            z = t.pernode(self._maybe_quantize)(z)
-            z_avg = t.mean(z)
+            z_avg = t.mean_q8(z) if cc.method == "lgc_rar_q8" else t.mean(z)
             rec = AE.lgc_decode_rar(state["ae"], z_avg[None])[0]
             rec_dense = SP.scatter_to_dense(rec, idx, n)
 
@@ -307,21 +308,27 @@ class GradientCompressor:
 
         ``node_index`` overrides the shard's linear index over ``axes``
         (pass it when the caller already computed it).  ``transport``
-        overrides ``CompressionConfig.transport`` ("mesh" or "ring")."""
+        overrides ``CompressionConfig.transport`` ("mesh", "ring",
+        "ring_q8" or "ring_hier")."""
         kind = transport if transport is not None else \
             (self.cc.transport or "mesh")
         if kind == "sim":
             raise ValueError(
                 "transport='sim' is not a distributed transport (stacked "
                 "(K, n) arrays, no mesh axes) — call sim_step instead")
-        t = make_transport(kind, self.K, axes, ae_axes, node_index)
+        t = make_transport(kind, self.K, axes, ae_axes, node_index,
+                           scale_block=self.cc.q8_scale_block,
+                           intra_chunk=self.cc.ring_intra_chunk,
+                           inter_chunk=self.cc.ring_inter_chunk)
         return self.step(t, state, g, step, phase)
 
     def sim_step(self, states, g_nodes: jnp.ndarray, step, phase: str):
         """Single-host emulation on stacked (K, n) node gradients.
         states: PyTree stacked over K (u, v per node; ae stored once).
         Returns (global_g (n,), states, stats)."""
-        return self.step(SimTransport(self.K), states, g_nodes, step, phase)
+        t = make_transport("sim", self.K,
+                           scale_block=self.cc.q8_scale_block)
+        return self.step(t, states, g_nodes, step, phase)
 
 
 # ---------------------------------------------------------------------------

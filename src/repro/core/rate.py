@@ -13,21 +13,34 @@ Per-node per-iteration payloads:
   lgc_rar     mu/16*4 floats * 4 bytes + deflate(leader indices)/K
               (the leader broadcasts the shared index set once; amortized
               across the K nodes as in the paper's rate accounting)
+  lgc_rar_q8  as lgc_rar, but the encoding floats cost 1 byte + per-block
+              scale overhead ONLY when the transport actually carries the
+              int8 representation ("ring_q8"); a float-wire transport
+              moves 4 bytes/value regardless of the fake quantization,
+              and this module says so (the measured-vs-accounted fix)
   lgc_ps      leader node:   mu/4 floats * 4 + innovation payload
               other nodes:   innovation payload only
               innovation payload = k_inv * 4 + deflate(inno indices)
+
+:func:`wire_payload_terms` is the executable contract between this
+payload accounting and the trace-time wire tally in
+``repro.dist.collectives``: it predicts, per collective kind, the exact
+structural bytes one steady-state compressor step puts on a ring-family
+wire.  ``tests/test_wire_accounting.py`` asserts ``wire_report()``
+matches it — the regression net against the next fake-bytes drift.
 """
 from __future__ import annotations
 
 import zlib
 from dataclasses import dataclass
-from typing import Dict, Optional
+from typing import Dict, Optional, Sequence
 
 import numpy as np
 
 from repro.configs.base import CompressionConfig
 from repro.core import autoencoder as AE
 from repro.core.sparsify import GradientLayout
+from repro.dist import quantize as Q
 
 BYTES_F32 = 4
 BYTES_I32 = 4
@@ -57,11 +70,18 @@ class RateReport:
 def rate_report(cc: CompressionConfig, layout: GradientLayout, K: int,
                 indices: Optional[np.ndarray] = None,
                 inno_indices: Optional[np.ndarray] = None,
-                count_exempt: bool = True) -> RateReport:
+                count_exempt: bool = True,
+                transport: Optional[str] = None) -> RateReport:
     """count_exempt=False reproduces the paper's own accounting, which
     (necessarily, given its Table VI numbers) omits the exempt first
     layer's dense gradient from the transmitted rate; True (default) is
-    the honest total including it."""
+    the honest total including it.
+
+    ``transport`` (default: ``cc.transport``) decides what the encoding
+    bytes *really* are for ``lgc_rar_q8``: ~1 byte/value + per-block
+    scale overhead on the int8 wire ("ring_q8"), the full 4 bytes/value
+    on every float-wire transport — fake quantization saves nothing on
+    the wire, and this report no longer pretends it does."""
     n = layout.n_total
     baseline = n * BYTES_F32
     dense_bytes = (sum(l.size for l in layout.dense) * BYTES_F32
@@ -82,13 +102,17 @@ def rate_report(cc: CompressionConfig, layout: GradientLayout, K: int,
 
     mu_pad = layout.mu_pad
     z_floats = AE.compressed_length(mu_pad)
-    z_bytes_per_val = 1 if cc.method == "lgc_rar_q8" else BYTES_F32
+    tkind = transport if transport is not None else cc.transport
+    if cc.method == "lgc_rar_q8" and tkind == "ring_q8":
+        z_payload = Q.wire_nbytes(z_floats,
+                                  cc.q8_scale_block or Q.SCALE_BLOCK)
+    else:
+        z_payload = z_floats * BYTES_F32
 
     if cc.method in ("lgc_rar", "lgc_rar_q8"):
         # every node sends the encoding; the rotating leader's index
         # broadcast is shared (amortized across nodes, Section V-A)
-        b = (dense_bytes + last_bytes + z_floats * z_bytes_per_val
-             + idx_bytes / K)
+        b = dense_bytes + last_bytes + z_payload + idx_bytes / K
         cr = baseline / b
         return RateReport(cc.method, b, b, b, baseline, cr, cr, cr)
 
@@ -117,3 +141,101 @@ def total_information_tb(bytes_per_node: float, K: int, steps: int) -> float:
     """Cumulative information sent by all nodes over training, in TB
     (paper Table IV 'Information' column)."""
     return bytes_per_node * K * steps / 1e12
+
+
+# ---------------------------------------------------------------------------
+# the wire contract: predicted trace-time tally for a ring-family step
+
+
+def wire_payload_terms(cc: CompressionConfig, layout: GradientLayout,
+                       K: int, transport: Optional[str] = None,
+                       axis_sizes: Optional[Sequence[int]] = None,
+                       ) -> Dict[str, float]:
+    """Predict ``collectives.wire_report()`` for ONE steady-state
+    compressor step on a ring-family transport, by collective kind —
+    the executable contract between the payload accounting above and the
+    measured trace-time tally (asserted equal, term by term, in
+    ``tests/test_wire_accounting.py``).
+
+    "Steady state" = the phase the method spends training in: compressed
+    for the lgc methods, topk for sparse_gd/dgc, warmup-equivalent for
+    "none".  ``axis_sizes`` gives the per-axis dp mesh sizes (default one
+    axis of K); prod(axis_sizes) must equal K.
+
+    Documented rate↔wire slack (why these terms are not literally
+    ``rate_report`` numbers):
+      * reductions pay the ring factor 2(Ka-1)/Ka per axis plus chunk
+        zero-padding to a multiple of Ka, vs the rate's flat per-node
+        payload;
+      * the exempt-last and sparse/dgc exchanges move through all_gather
+        — (K-1)x values AND raw int32 indices — while the rate prices
+        one node's DEFLATE-coded send (the wire does not entropy-code);
+      * the leader index set ships as a raw int32 broadcast at
+        (K-1)/K·nbytes, vs the rate's deflate(idx)/K amortization;
+      * the ``lgc_rar_q8`` encoding term uses the same
+        ``quantize.wire_nbytes`` (1 byte/value + one f32 scale per
+        block) as ``rate_report(transport="ring_q8")`` — on the int8
+        wire, measured and accounted bytes agree by construction.
+    """
+    tkind = transport if transport is not None else cc.transport
+    assert tkind in ("ring", "ring_q8", "ring_hier"), tkind
+    Ks = tuple(axis_sizes) if axis_sizes else (K,)
+    assert int(np.prod(Ks)) == K, (Ks, K)
+    sb = cc.q8_scale_block or Q.SCALE_BLOCK
+    terms: Dict[str, float] = {}
+
+    def add(kind: str, b: float) -> None:
+        if b:
+            terms[kind] = terms.get(kind, 0.0) + float(b)
+
+    def reduce_f32(n_vals: int, itemsize: int = BYTES_F32) -> None:
+        if n_vals <= 0:
+            return
+        if tkind == "ring_hier" and len(Ks) > 1:
+            K1 = Ks[-1]
+            c = -(-n_vals // K1)
+            if K1 > 1:
+                add("ring_hier_intra", 2 * (K1 - 1) * c * itemsize)
+            for Ka in Ks[:-1]:
+                if Ka > 1:
+                    add("ring_hier_inter",
+                        2 * (Ka - 1) * (-(-c // Ka)) * itemsize)
+        else:
+            for Ka in Ks:
+                if Ka > 1:
+                    add("ring_allreduce",
+                        2 * (Ka - 1) * (-(-n_vals // Ka)) * itemsize)
+
+    def reduce_q8(n_vals: int) -> None:
+        for Ka in Ks:
+            if Ka > 1:
+                add("ring_allreduce_q8",
+                    2 * (Ka - 1) * Q.wire_nbytes(-(-n_vals // Ka), sb))
+
+    if cc.method == "none":
+        reduce_f32(layout.n_total)
+        return terms
+
+    # exempt-dense segments: reduced as a d-length f32 vector
+    reduce_f32(sum(l.size for l in layout.dense))
+    # exempt-last: sparse_mean all-gathers k_last values + int32 indices
+    if layout.k_last:
+        add("all_gather",
+            (K - 1) * layout.k_last * (BYTES_F32 + BYTES_I32))
+
+    mp = layout.mu_pad
+    if cc.method in ("sparse_gd", "dgc"):
+        add("all_gather", (K - 1) * mp * (BYTES_F32 + BYTES_I32))
+        return terms
+
+    # lgc family: the rotating leader's index set is a raw i32 broadcast
+    add("broadcast", (K - 1) / K * mp * BYTES_I32)
+    zl = AE.compressed_length(mp)
+    if cc.method == "lgc_ps":
+        add("broadcast", (K - 1) / K * zl * BYTES_F32)   # z_common
+        add("all_gather", (K - 1) * mp * BYTES_F32)      # innovations
+    elif cc.method == "lgc_rar_q8" and tkind == "ring_q8":
+        reduce_q8(zl)
+    else:
+        reduce_f32(zl)
+    return terms

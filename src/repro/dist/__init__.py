@@ -8,12 +8,16 @@
 """
 from repro.dist.collectives import (
     all_gather,
+    broadcast,
+    hierarchical_ring_allreduce,
     pmean,
     psum,
     record_wire_bytes,
     reset_wire_tally,
     ring_allreduce,
     ring_allreduce_multi,
+    ring_allreduce_q8,
+    ring_broadcast,
     wire_report,
 )
 from repro.dist.sharding import (
@@ -25,7 +29,11 @@ from repro.dist.sharding import (
     partition_spec,
 )
 from repro.dist.transport import (
+    RING_TRANSPORTS,
+    TRANSPORTS,
     MeshTransport,
+    RingHierTransport,
+    RingQ8Transport,
     RingTransport,
     SimTransport,
     Transport,

@@ -8,6 +8,23 @@ moving one 1/K-sized chunk to the ring neighbour.  Unlike ``lax.psum``
 here is *structural*: exactly ``2*(K-1)/K * nbytes`` leaves each node per
 reduction, and the module records it.
 
+The ring family (all recorded at their real payload sizes):
+
+  ring_allreduce            f32 wire, one ring per axis
+  ring_allreduce_q8         int8 wire: payloads are int8 values + one f32
+                            scale per ``scale_block`` values (quantize
+                            before send, dequantize-accumulate after
+                            receive, requantize to forward) — the
+                            transport that makes ``lgc_rar_q8``'s 1-byte
+                            rate claim real
+  hierarchical_ring_allreduce  intra-pod reduce-scatter → inter-pod
+                            ring(s) of the owned 1/K_intra shard →
+                            intra-pod all-gather; the inter stage moves
+                            K_intra× fewer bytes than chaining full rings
+  broadcast / ring_broadcast  accounted one-to-all at (K-1)/K·nbytes —
+                            the leader's index-set exchange is a
+                            broadcast, NOT a 2(K-1)/K allreduce
+
 Accounting semantics: shapes are static, so byte counts are recorded at
 *trace* time into a module-level tally.  Each jit specialization records
 its per-step bytes once; call :func:`reset_wire_tally` before building a
@@ -24,6 +41,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.dist import quantize as Q
+
 AxisName = Union[str, Sequence[str]]
 
 _tally = threading.local()
@@ -36,6 +55,8 @@ def _tally_dict() -> Dict[str, float]:
 
 
 def record_wire_bytes(kind: str, nbytes: float) -> None:
+    if not nbytes:          # zero-length payloads create no tally entry
+        return
     d = _tally_dict()
     d[kind] = d.get(kind, 0.0) + float(nbytes)
 
@@ -85,59 +106,95 @@ def all_gather(x, axis: AxisName, K: Optional[int] = None):
 
 
 # ---------------------------------------------------------------------------
-# explicit ring allreduce
+# explicit ring allreduce (f32 wire)
 
 
-def ring_allreduce(x: jnp.ndarray, axis: str, op: str = "add") -> jnp.ndarray:
+def _ring_fwd(K):
+    return [(s, (s + 1) % K) for s in range(K)]
+
+
+def _to_chunks(x: jnp.ndarray, K: int):
+    """Flatten + zero-pad to a multiple of K -> ((K, chunk), n_orig)."""
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    pad = (-n) % K
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
+    return flat.reshape(K, -1), n
+
+
+def _ppermute_chunked(x, axis, perm, max_elems: Optional[int] = None):
+    """``lax.ppermute`` of a 1-D payload, optionally split into
+    ceil(size/max_elems) messages — the pipelining-granularity knob the
+    hierarchical transport tunes per ring level.  Bytes and numerics are
+    unchanged; only the message count differs."""
+    if not max_elems or x.shape[0] <= max_elems:
+        return jax.lax.ppermute(x, axis, perm)
+    pieces = []
+    for s in range(0, x.shape[0], max_elems):
+        e = min(s + max_elems, x.shape[0])
+        pieces.append(jax.lax.ppermute(
+            jax.lax.slice_in_dim(x, s, e), axis, perm))
+    return jnp.concatenate(pieces)
+
+
+def _ring_reduce_scatter(chunks, axis, i, K, max_chunk_elems=None):
+    """(K-1) forward hops; returns this node's fully-reduced chunk —
+    node i ends up owning chunk (i+1) mod K."""
+    fwd = _ring_fwd(K)
+
+    def chunk_at(j):
+        return jax.lax.dynamic_index_in_dim(chunks, j % K, 0, keepdims=False)
+
+    send = chunk_at(i)
+    for t in range(K - 1):
+        recv = _ppermute_chunked(send, axis, fwd, max_chunk_elems)
+        send = recv + chunk_at(i - t - 1)
+    return send
+
+
+def _ring_all_gather(send, axis, i, K, max_chunk_elems=None):
+    """Circulate the completed chunks; returns the full (K, chunk) table
+    (slot j = reduced chunk j, identical on every node)."""
+    fwd = _ring_fwd(K)
+    out = jnp.zeros((K,) + send.shape, send.dtype)
+    out = jax.lax.dynamic_update_index_in_dim(out, send, (i + 1) % K, 0)
+    for t in range(K - 1):
+        send = _ppermute_chunked(send, axis, fwd, max_chunk_elems)
+        out = jax.lax.dynamic_update_index_in_dim(out, send, (i - t) % K, 0)
+    return out
+
+
+def ring_allreduce(x: jnp.ndarray, axis: str, op: str = "add",
+                   max_chunk_elems: Optional[int] = None,
+                   kind: str = "ring_allreduce") -> jnp.ndarray:
     """Chunked ring allreduce of ``x`` over manual mesh axis ``axis``.
 
     Must run inside a shard_map that binds ``axis`` manually.  Works for
     any shape (flattened internally, zero-padded to a multiple of K).
-    ``op``: "add" or "mean".
+    ``op``: "add" or "mean".  ``max_chunk_elems`` splits each hop's
+    payload into multiple ppermute messages (bytes unchanged); ``kind``
+    is the wire-tally key (the hierarchical ring relabels its stages).
     """
     assert op in ("add", "mean"), op
     K = jax.lax.axis_size(axis)
     if K == 1:
         return x
     i = jax.lax.axis_index(axis)
-    flat = x.reshape(-1)
-    n = flat.shape[0]
-    pad = (-n) % K
-    if pad:
-        flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
-    chunks = flat.reshape(K, -1)
-    chunk_elems = chunks.shape[1]
-    fwd = [(s, (s + 1) % K) for s in range(K)]
+    chunks, n = _to_chunks(x, K)
     record_wire_bytes(
-        "ring_allreduce",
-        2 * (K - 1) * chunk_elems * jnp.dtype(x.dtype).itemsize)
-
-    def chunk_at(j):
-        return jax.lax.dynamic_index_in_dim(chunks, j % K, 0, keepdims=False)
-
-    # reduce-scatter: after K-1 hops node i holds the full sum of
-    # chunk (i+1) mod K
-    send = chunk_at(i)
-    for t in range(K - 1):
-        recv = jax.lax.ppermute(send, axis, fwd)
-        send = recv + chunk_at(i - t - 1)
-
-    # all-gather: circulate the completed chunks
-    out = jnp.zeros_like(chunks)
-    out = jax.lax.dynamic_update_index_in_dim(out, send, (i + 1) % K, 0)
-    for t in range(K - 1):
-        send = jax.lax.ppermute(send, axis, fwd)
-        out = jax.lax.dynamic_update_index_in_dim(out, send, (i - t) % K, 0)
-
+        kind, 2 * (K - 1) * chunks.shape[1] * jnp.dtype(x.dtype).itemsize)
+    send = _ring_reduce_scatter(chunks, axis, i, K, max_chunk_elems)
+    out = _ring_all_gather(send, axis, i, K, max_chunk_elems)
     res = out.reshape(-1)[:n].reshape(x.shape)
     return res / K if op == "mean" else res
 
 
 def ring_allreduce_multi(x: jnp.ndarray, axes: Sequence[str],
                          op: str = "add") -> jnp.ndarray:
-    """Ring allreduce over several mesh axes (e.g. ("pod", "data")) by
-    chaining per-axis rings — the hierarchical form real multi-pod rings
-    take (intra-pod ring, then inter-pod ring)."""
+    """Ring allreduce over several mesh axes by chaining one full-length
+    ring per axis.  See :func:`hierarchical_ring_allreduce` for the
+    cheaper intra/inter-pod form."""
     out = x
     for ax in axes:
         out = ring_allreduce(out, ax, op="add")
@@ -145,3 +202,177 @@ def ring_allreduce_multi(x: jnp.ndarray, axes: Sequence[str],
         K = jax.lax.axis_size(tuple(axes))
         out = out / K
     return out
+
+
+# ---------------------------------------------------------------------------
+# int8-wire ring allreduce
+
+
+def ring_allreduce_q8(x: jnp.ndarray, axis: str, op: str = "add",
+                      scale_block: int = Q.SCALE_BLOCK) -> jnp.ndarray:
+    """Ring allreduce whose ``ppermute`` payloads are int8 values + one
+    f32 scale per ``scale_block`` values — the wire really moves ~1
+    byte/value (+ scale overhead), and the tally records exactly that.
+
+    Reduce-scatter hops quantize the partial sum before each send and
+    dequantize-accumulate after each receive (quantize-forward), so the
+    error compounds over the K-1 hops; the completed chunk is then
+    quantized ONCE and the same int8 payload circulates through the
+    all-gather, so every node — the owner included — decodes the
+    identical value and the result stays exactly replicated.  Worst-case
+    per-value error after ``op="mean"`` is bounded by
+    ``K/(2·127) · max_block|partial sums|`` (K-1 requantizations + 1
+    all-gather quantization, each ≤ scale/2, all divided by K).
+
+    With K == 1 no bytes move, but the value still passes through one
+    quantize→dequantize roundtrip so the "consumers see a quantized
+    value" contract is K-independent (matching the float-wire
+    transports' fake quantization).
+    """
+    assert op in ("add", "mean"), op
+    assert jnp.issubdtype(x.dtype, jnp.floating), x.dtype
+    K = jax.lax.axis_size(axis)
+    if K == 1:
+        return Q.fake_quantize(x, scale_block)
+    i = jax.lax.axis_index(axis)
+    chunks, n = _to_chunks(x.astype(jnp.float32), K)
+    c = chunks.shape[1]
+    record_wire_bytes("ring_allreduce_q8",
+                      2 * (K - 1) * Q.wire_nbytes(c, scale_block))
+    fwd = _ring_fwd(K)
+
+    def chunk_at(j):
+        return jax.lax.dynamic_index_in_dim(chunks, j % K, 0, keepdims=False)
+
+    # reduce-scatter, quantize-forward
+    send = chunk_at(i)
+    for t in range(K - 1):
+        q, s = Q.quantize_i8(send, scale_block)
+        q = jax.lax.ppermute(q, axis, fwd)
+        s = jax.lax.ppermute(s, axis, fwd)
+        send = Q.dequantize_i8(q, s, c) + chunk_at(i - t - 1)
+
+    # all-gather: quantize once, circulate the int8 payload unchanged
+    q, s = Q.quantize_i8(send, scale_block)
+    out = jnp.zeros_like(chunks)
+    out = jax.lax.dynamic_update_index_in_dim(
+        out, Q.dequantize_i8(q, s, c), (i + 1) % K, 0)
+    for t in range(K - 1):
+        q = jax.lax.ppermute(q, axis, fwd)
+        s = jax.lax.ppermute(s, axis, fwd)
+        out = jax.lax.dynamic_update_index_in_dim(
+            out, Q.dequantize_i8(q, s, c), (i - t) % K, 0)
+
+    res = out.reshape(-1)[:n].reshape(x.shape)
+    return res / K if op == "mean" else res
+
+
+def ring_allreduce_q8_multi(x: jnp.ndarray, axes: Sequence[str],
+                            op: str = "add",
+                            scale_block: int = Q.SCALE_BLOCK) -> jnp.ndarray:
+    """Chained per-axis int8 rings (mean divides once at the end so the
+    intermediate sums keep full int8 range)."""
+    out = x
+    for ax in axes:
+        out = ring_allreduce_q8(out, ax, op="add", scale_block=scale_block)
+    if op == "mean":
+        out = out / jax.lax.axis_size(tuple(axes))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# hierarchical (intra-pod / inter-pod) ring allreduce
+
+
+def hierarchical_ring_allreduce(x: jnp.ndarray, axes: Sequence[str],
+                                op: str = "add",
+                                intra_chunk_elems: Optional[int] = None,
+                                inter_chunk_elems: Optional[int] = None,
+                                ) -> jnp.ndarray:
+    """Hierarchical allreduce over multi-axis dp meshes: reduce-scatter
+    on the *intra-pod* axis (the LAST of ``axes`` — the fastest-varying,
+    highest-bandwidth one), ring-allreduce the owned 1/K_intra shard over
+    the remaining (inter-pod) axes, then all-gather intra-pod.
+
+    vs chaining full-length rings per axis (``ring_allreduce_multi``)
+    the inter-pod stage moves K_intra× fewer bytes:
+
+        chained:      Σ_a 2(K_a-1)/K_a · nbytes
+        hierarchical: 2(K₁-1)/K₁ · nbytes  +  Σ_inter 2(K_a-1)/K_a · nbytes/K₁
+
+    ``intra_chunk_elems`` / ``inter_chunk_elems`` independently cap the
+    per-message payload of each ring level (pipelining granularity; bytes
+    unchanged).  With a single axis this IS ``ring_allreduce`` — same
+    schedule, bit-identical result.  Wire bytes are recorded under
+    ``ring_hier_intra`` / ``ring_hier_inter``.
+    """
+    assert op in ("add", "mean"), op
+    axes = tuple(axes)
+    if not axes:
+        return x
+    if len(axes) == 1:
+        return ring_allreduce(x, axes[0], op=op,
+                              max_chunk_elems=intra_chunk_elems)
+    intra = axes[-1]
+    K1 = jax.lax.axis_size(intra)
+    i1 = jax.lax.axis_index(intra)
+    chunks, n = _to_chunks(x, K1)
+    if K1 > 1:
+        record_wire_bytes(
+            "ring_hier_intra",
+            2 * (K1 - 1) * chunks.shape[1] * jnp.dtype(x.dtype).itemsize)
+    shard = _ring_reduce_scatter(chunks, intra, i1, K1, intra_chunk_elems)
+    for ax in axes[:-1]:
+        shard = ring_allreduce(shard, ax, op="add",
+                               max_chunk_elems=inter_chunk_elems,
+                               kind="ring_hier_inter")
+    out = _ring_all_gather(shard, intra, i1, K1, intra_chunk_elems)
+    res = out.reshape(-1)[:n].reshape(x.shape)
+    if op == "mean":
+        res = res / jax.lax.axis_size(axes)
+    return res
+
+
+# ---------------------------------------------------------------------------
+# accounted one-to-all broadcast
+
+
+def _bcast_bytes(x, axes) -> float:
+    K = jax.lax.axis_size(_axes_tuple(axes))
+    # a chain/tree broadcast sends K-1 copies total: (K-1)/K·nbytes per
+    # node — NOT the 2(K-1)/K allreduce bytes a masked psum suggests
+    return (K - 1) / max(K, 1) * _nbytes(x)
+
+
+def broadcast(x, axes: AxisName, is_leader) -> jnp.ndarray:
+    """Leader's ``x`` → all nodes, via the mesh idiom (lax has no
+    broadcast primitive): psum of the one-hot-masked value.  Accounted at
+    the broadcast cost (K-1)/K·nbytes — the wrapper exists so the index
+    exchange is *named and priced* as a broadcast in the wire tally
+    instead of masquerading as an all_reduce."""
+    record_wire_bytes("broadcast", _bcast_bytes(x, axes))
+    zero = jnp.zeros_like(x)
+    return jax.lax.psum(jnp.where(is_leader, x, zero), _axes_tuple(axes))
+
+
+def ring_broadcast(x, axes: AxisName, is_leader) -> jnp.ndarray:
+    """Leader's ``x`` → all nodes over explicit ``ppermute`` forwarding:
+    per axis, K-1 hops in which a node adopts the payload the first time
+    it arrives from a holder.  SPMD makes every node send each hop, but
+    only the holder-chain payloads carry information — a real broadcast
+    sends K-1 messages total, which is what the tally records
+    ((K-1)/K·nbytes per node, same price as :func:`broadcast`)."""
+    axes_t = _axes_tuple(axes)
+    record_wire_bytes("broadcast", _bcast_bytes(x, axes_t))
+    buf = jnp.where(is_leader, x, jnp.zeros_like(x))
+    have = jnp.asarray(is_leader).astype(jnp.int32)
+    for ax in axes_t:
+        K = jax.lax.axis_size(ax)
+        fwd = _ring_fwd(K)
+        for _ in range(K - 1):
+            recv = jax.lax.ppermute(buf, ax, fwd)
+            recv_have = jax.lax.ppermute(have, ax, fwd)
+            take = (recv_have > 0) & (have == 0)
+            buf = jnp.where(take, recv, buf)
+            have = jnp.maximum(have, recv_have)
+    return buf

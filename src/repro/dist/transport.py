@@ -12,6 +12,14 @@ against this protocol, and the substrate is swapped per run:
                  repro.dist.collectives, so the paper's ring pattern is
                  actually exercised and its wire bytes are *measured*
                  (see collectives.wire_report), not estimated.
+  RingQ8Transport  RingTransport whose compressed-payload reductions
+                 (``mean_q8``) ride a REAL int8 wire: quantize before
+                 each ppermute hop, dequantize-accumulate after — the
+                 transport that makes ``lgc_rar_q8``'s 1-byte/value rate
+                 claim true in measured bytes.
+  RingHierTransport  hierarchical intra-pod/inter-pod rings on
+                 multi-axis dp meshes (last mesh axis = intra-pod), with
+                 independently tunable per-level message chunking.
   SimTransport   stacked (K, n) single-host arrays — the paper's own
                  several-nodes-per-GPU emulation; collectives become
                  axis-0 reductions and per-node compute becomes vmap.
@@ -20,11 +28,16 @@ Value convention: a *per-node* value is this node's shard under
 Mesh/Ring and carries a leading K axis under Sim; a *global* value is
 replicated under Mesh/Ring and unbatched under Sim.  ``pernode`` maps a
 per-node function (in_axes marks which args are per-node, vmap-style);
-``mean``/``sum``/``all_gather``/``from_leader`` cross the node boundary
-and return global values.  A transport-equivalence test asserts all
-three produce identical global gradients for all five methods.
+``mean``/``sum``/``all_gather``/``from_leader``/``mean_q8`` cross the
+node boundary and return global values.  ``mean_q8`` reduces a value
+whose *wire representation* is int8 + per-block f32 scales: real on
+RingQ8Transport, fake-quantized (through the same
+``repro.dist.quantize`` module) then reduced in f32 everywhere else — so
+Sim(fake) == RingQ8(real) up to the wire's bounded requantization error.
+A transport-equivalence test asserts all substrates produce identical
+global gradients for all five methods (RingQ8 within that bound).
 
-Adding a transport = implementing these six methods (see DESIGN.md).
+Adding a transport = implementing these seven methods (see DESIGN.md).
 """
 from __future__ import annotations
 
@@ -35,6 +48,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.dist import collectives as C
+from repro.dist import quantize as Q
 
 Axis = Sequence[str]
 
@@ -50,6 +64,7 @@ class Transport(Protocol):
     def all_gather(self, x): ...
     def from_leader(self, x, leader): ...
     def sparse_mean(self, vals, idx, n: int): ...
+    def mean_q8(self, x): ...
 
 
 def _scatter(vals, idx, n):
@@ -67,6 +82,7 @@ class MeshTransport:
     K: int
     ae_axes: Tuple[str, ...] = ()
     node_index: Optional[jnp.ndarray] = None   # override for exotic callers
+    scale_block: int = Q.SCALE_BLOCK           # int8-wire scale granularity
 
     def _index(self):
         if self.node_index is not None:
@@ -91,9 +107,14 @@ class MeshTransport:
     def from_leader(self, x, leader):
         if not self.axes:
             return x
-        is_leader = (self._index() == leader)
-        zero = jnp.zeros_like(x)
-        return self.sum(jnp.where(is_leader, x, zero))
+        return C.broadcast(x, self.axes, self._index() == leader)
+
+    def mean_q8(self, x):
+        """Fake int8: quantize→dequantize per node through the shared
+        quantize module, then the f32 reduction — the mesh wire still
+        moves 4 bytes/value (and rate.py accounts it as such); only
+        RingQ8Transport makes the int8 bytes real."""
+        return self.mean(Q.fake_quantize(x, self.scale_block))
 
     def sparse_mean(self, vals, idx, n):
         """Mean of per-node sparse (vals, idx) as a dense (n,) vector,
@@ -101,7 +122,7 @@ class MeshTransport:
         if not self.axes:
             return _scatter(vals, idx, n)
         if vals.shape[0] == 0:
-            return jnp.zeros((n,), jnp.float32)
+            return jnp.zeros((n,), vals.dtype)
         vals_g = self.all_gather(vals)
         idx_g = self.all_gather(idx)
         dense = jax.vmap(lambda vv, ii: _scatter(vv, ii, n))(vals_g, idx_g)
@@ -111,8 +132,9 @@ class MeshTransport:
 @dataclass(frozen=True)
 class RingTransport(MeshTransport):
     """MeshTransport with every cross-node reduction routed through the
-    explicit chunked ring in repro.dist.collectives (hierarchical per-axis
-    rings on multi-axis dp meshes)."""
+    explicit chunked ring in repro.dist.collectives (chained per-axis
+    rings on multi-axis dp meshes) and the leader exchange through the
+    explicit ppermute-forwarding broadcast."""
 
     def mean(self, x):
         return C.ring_allreduce_multi(x, self.axes, op="mean") \
@@ -121,6 +143,50 @@ class RingTransport(MeshTransport):
     def sum(self, x):
         return C.ring_allreduce_multi(x, self.axes, op="add") \
             if self.axes else x
+
+    def from_leader(self, x, leader):
+        if not self.axes:
+            return x
+        return C.ring_broadcast(x, self.axes, self._index() == leader)
+
+
+@dataclass(frozen=True)
+class RingQ8Transport(RingTransport):
+    """RingTransport whose ``mean_q8`` rides the REAL int8 wire
+    (collectives.ring_allreduce_q8: int8 payloads + one f32 scale per
+    ``scale_block`` values, quantize-forward through the ring).  All
+    other traffic — exempt-dense, exempt-last, index broadcast,
+    all_gather — stays f32, matching rate.py, which only prices the
+    encoding reduction at ~1 byte/value."""
+
+    def mean_q8(self, x):
+        if not self.axes:
+            return Q.fake_quantize(x, self.scale_block)
+        return C.ring_allreduce_q8_multi(x, self.axes, op="mean",
+                                         scale_block=self.scale_block)
+
+
+@dataclass(frozen=True)
+class RingHierTransport(RingTransport):
+    """Hierarchical intra-pod/inter-pod rings: reduce-scatter on the LAST
+    mesh axis (intra-pod), ring-allreduce the owned shard over the
+    remaining axes, all-gather intra-pod — the inter stage moves
+    K_intra× fewer bytes than RingTransport's chained full rings.
+    ``intra_chunk``/``inter_chunk`` independently cap each level's
+    per-message payload (0/None = one message per hop).  On a single dp
+    axis this degenerates to exactly RingTransport's schedule."""
+    intra_chunk: Optional[int] = None
+    inter_chunk: Optional[int] = None
+
+    def mean(self, x):
+        return C.hierarchical_ring_allreduce(
+            x, self.axes, op="mean", intra_chunk_elems=self.intra_chunk,
+            inter_chunk_elems=self.inter_chunk) if self.axes else x
+
+    def sum(self, x):
+        return C.hierarchical_ring_allreduce(
+            x, self.axes, op="add", intra_chunk_elems=self.intra_chunk,
+            inter_chunk_elems=self.inter_chunk) if self.axes else x
 
 
 # ===========================================================================
@@ -131,6 +197,7 @@ class SimTransport:
     """Single-host emulation on stacked (K, ...) node arrays."""
     K: int
     ae_axes: Tuple[str, ...] = ()
+    scale_block: int = Q.SCALE_BLOCK
 
     def pernode(self, fn, in_axes=0):
         return jax.vmap(fn, in_axes=in_axes)
@@ -147,9 +214,15 @@ class SimTransport:
     def from_leader(self, x, leader):
         return jax.lax.dynamic_index_in_dim(x, leader, 0, keepdims=False)
 
+    def mean_q8(self, x):
+        """The fake-quant oracle: per-node quantize→dequantize through
+        the shared module, then the axis-0 mean."""
+        fq = jax.vmap(lambda xx: Q.fake_quantize(xx, self.scale_block))
+        return fq(x).mean(0)
+
     def sparse_mean(self, vals, idx, n):
         if vals.shape[-1] == 0:
-            return jnp.zeros((n,), jnp.float32)
+            return jnp.zeros((n,), vals.dtype)
         dense = jax.vmap(lambda vv, ii: _scatter(vv, ii, n))(vals, idx)
         return dense.mean(0)
 
@@ -157,16 +230,33 @@ class SimTransport:
 # ===========================================================================
 
 
-TRANSPORTS = ("mesh", "ring", "sim")
+TRANSPORTS = ("mesh", "ring", "ring_q8", "ring_hier", "sim")
+
+# the ring family: manual-shard_map transports with structurally measured
+# wire bytes (everything but mesh's XLA-chosen lowering and sim's
+# wire-free emulation)
+RING_TRANSPORTS = ("ring", "ring_q8", "ring_hier")
 
 
 def make_transport(kind: str, K: int, axes: Axis = (),
-                   ae_axes: Axis = (), node_index=None):
-    """Factory keyed by CompressionConfig.transport."""
+                   ae_axes: Axis = (), node_index=None, *,
+                   scale_block: int = 0,
+                   intra_chunk: Optional[int] = None,
+                   inter_chunk: Optional[int] = None):
+    """Factory keyed by CompressionConfig.transport.  ``scale_block``
+    (0 = default) sets the int8-wire scale granularity; ``intra_chunk``/
+    ``inter_chunk`` tune the hierarchical ring's per-level message size."""
+    sb = scale_block or Q.SCALE_BLOCK
+    args = (tuple(axes), K, tuple(ae_axes), node_index, sb)
     if kind == "mesh":
-        return MeshTransport(tuple(axes), K, tuple(ae_axes), node_index)
+        return MeshTransport(*args)
     if kind == "ring":
-        return RingTransport(tuple(axes), K, tuple(ae_axes), node_index)
+        return RingTransport(*args)
+    if kind == "ring_q8":
+        return RingQ8Transport(*args)
+    if kind == "ring_hier":
+        return RingHierTransport(*args, intra_chunk or None,
+                                 inter_chunk or None)
     if kind == "sim":
-        return SimTransport(K, tuple(ae_axes))
+        return SimTransport(K, tuple(ae_axes), sb)
     raise ValueError(f"unknown transport {kind!r}; known: {TRANSPORTS}")

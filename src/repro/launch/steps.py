@@ -18,8 +18,9 @@ Two training paths and two serving paths:
   (node x model-shard), so the cross-node reduction carries top-k
   values (phase 2) or autoencoder encodings (phase 3) instead of the
   dense gradient — over lax collectives (``transport="mesh"``) or the
-  explicit chunked ring in repro.dist.collectives (``transport="ring"``,
-  wire bytes measured).  EF/momentum state lives per (node x
+  explicit ring family in repro.dist.collectives (``transport="ring"``,
+  ``"ring_q8"`` — int8 wire — or ``"ring_hier"``; wire bytes measured
+  in all three).  EF/momentum state lives per (node x
   model-shard) as a (DP, MP, n_local) array.  Params stay replicated
   across dp shards (paper semantics: every node holds the model).
 

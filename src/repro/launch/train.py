@@ -29,10 +29,14 @@ def parse_args(argv=None):
                    choices=["none", "sparse_gd", "dgc", "lgc_ps", "lgc_rar",
                             "lgc_rar_q8"])
     p.add_argument("--sparsity", type=float, default=0.001)
-    p.add_argument("--transport", default="mesh", choices=["mesh", "ring"],
-                   help="communication substrate: lax collectives (mesh) "
-                        "or the explicit chunked ring with measured wire "
-                        "bytes (ring)")
+    p.add_argument("--transport", default="mesh",
+                   choices=["mesh", "ring", "ring_q8", "ring_hier"],
+                   help="communication substrate: lax collectives (mesh), "
+                        "the explicit chunked ring with measured wire "
+                        "bytes (ring), the int8-wire ring that makes "
+                        "lgc_rar_q8's 1-byte/value claim real (ring_q8), "
+                        "or hierarchical intra/inter-pod rings on "
+                        "multi-axis dp meshes (ring_hier)")
     p.add_argument("--topk-backend", default="jnp",
                    choices=["jnp", "pallas", "fused"],
                    help="residual top-k selection backend (fused = the "

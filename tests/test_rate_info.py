@@ -39,11 +39,16 @@ def test_lgc_rar_beats_dgc_rate():
                       lay, 4)
     rar = rate_report(CompressionConfig(method="lgc_rar", sparsity=0.001),
                       lay, 4)
-    q8 = rate_report(CompressionConfig(method="lgc_rar_q8", sparsity=0.001),
-                     lay, 4)
+    # q8's 1-byte/value claim is only real on the int8 wire: the rate is
+    # transport-aware (wire accounting fix) — on the default float-wire
+    # transport it matches lgc_rar exactly
+    cc_q8 = CompressionConfig(method="lgc_rar_q8", sparsity=0.001)
+    q8_wire = rate_report(cc_q8, lay, 4, transport="ring_q8")
+    q8_float = rate_report(cc_q8, lay, 4)
     # encoder compresses the top-k payload 4x -> higher CR than DGC
     assert rar.compression_ratio > dgc.compression_ratio
-    assert q8.compression_ratio > rar.compression_ratio
+    assert q8_wire.compression_ratio > rar.compression_ratio
+    assert q8_float.compression_ratio == rar.compression_ratio
 
 
 def test_lgc_ps_leader_vs_others():

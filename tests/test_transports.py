@@ -1,7 +1,8 @@
 """Transport equivalence: the one-source-of-truth compressor step must
 produce identical global gradients and compressor states under
-MeshTransport, SimTransport and RingTransport, for all five methods, on a
-fake 4-device host mesh — and the Pallas selection backend must match the
+MeshTransport, SimTransport, RingTransport and RingHierTransport — and
+RingQ8Transport within the quantization bound — for all methods, on a
+fake 4-device host mesh; and the Pallas selection backend must match the
 jnp reference.  Ring wire bytes are asserted against the structural
 2*(K-1)/K bound reported by repro.dist.collectives."""
 import jax
@@ -13,7 +14,8 @@ from repro.configs.base import CompressionConfig
 from repro.core import build_compressor
 from repro.core import sparsify as SP
 from repro.dist import collectives as C
-from repro.dist.transport import SimTransport, make_transport
+from repro.dist.transport import (RingHierTransport, RingQ8Transport,
+                                  SimTransport, make_transport)
 
 PARAMS = {
     "embed": {"w": jnp.zeros((32, 16))},
@@ -40,9 +42,15 @@ def _cc(method, **kw):
 def test_make_transport_kinds():
     t = make_transport("sim", 4)
     assert isinstance(t, SimTransport)
-    for kind in ("mesh", "ring"):
+    for kind in ("mesh", "ring", "ring_q8", "ring_hier"):
         tt = make_transport(kind, 4, axes=("data",))
         assert tt.K == 4
+    q8 = make_transport("ring_q8", 4, axes=("data",), scale_block=64)
+    assert isinstance(q8, RingQ8Transport) and q8.scale_block == 64
+    hier = make_transport("ring_hier", 4, axes=("pod", "data"),
+                          intra_chunk=128, inter_chunk=32)
+    assert isinstance(hier, RingHierTransport)
+    assert (hier.intra_chunk, hier.inter_chunk) == (128, 32)
     with pytest.raises(ValueError):
         make_transport("pigeon", 4)
 
@@ -60,7 +68,8 @@ def test_sim_transport_ops():
 
 
 # ---------------------------------------------------------------------------
-# the headline equivalence: Mesh == Sim == Ring on a fake 4-device mesh
+# the headline equivalence: Mesh == Sim == Ring == RingHier (exact) and
+# RingQ8 (quantization-bounded) on a fake 4-device mesh
 
 
 def test_all_methods_all_transports_equivalent(subproc):
@@ -69,7 +78,7 @@ import jax, jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 from repro.configs.base import CompressionConfig
 from repro.core import build_compressor
-from repro.core.phases import phase_for_step
+from repro.core.phases import PHASE_COMPRESSED, phase_for_step
 from repro.dist import collectives as C
 
 params = {"embed": {"w": jnp.zeros((32, 16))},
@@ -77,6 +86,14 @@ params = {"embed": {"w": jnp.zeros((32, 16))},
           "layer2": {"w": jnp.zeros((64, 64))},
           "lm_head": {"w": jnp.zeros((16, 32))}}
 K = 4
+TRANSPORTS = ("mesh", "ring", "ring_hier", "ring_q8")
+# ring_q8's compressed-phase gradient differs from the fake-quant oracle
+# by the wire's K requantization hops (each <= scale/2, scale ~
+# max|partial z|/127); measured worst case here is ~3e-4 — 2e-3 is the
+# quantization-aware bound with margin.  Everything else is exact to the
+# usual float tolerances (accumulators included: quantization never
+# touches u/v, only the reduced encoding).
+Q8_TOL = 2e-3
 mesh = jax.make_mesh((4,), ("data",),
                      axis_types=(jax.sharding.AxisType.Auto,))
 
@@ -107,8 +124,8 @@ for method in ["none", "sparse_gd", "dgc", "lgc_rar", "lgc_rar_q8",
 
     states = {"sim": comp.init_sim_states(jax.random.PRNGKey(0))}
     uvs = {t: {"u": jnp.zeros((K, n)), "v": jnp.zeros((K, n))}
-           for t in ("mesh", "ring")}
-    aes = {t: {k: base[k] for k in ae_keys} for t in ("mesh", "ring")}
+           for t in TRANSPORTS}
+    aes = {t: {k: base[k] for k in ae_keys} for t in TRANSPORTS}
     rng = jax.random.PRNGKey(1)
     tol = 1e-3 if method.startswith("lgc") else 1e-5
     C.reset_wire_tally()
@@ -119,14 +136,19 @@ for method in ["none", "sparse_gd", "dgc", "lgc_rar", "lgc_rar_q8",
         g_sim, states["sim"], _ = comp.sim_step(states["sim"], g, step,
                                                 phase)
         outs = {}
-        for t in ("mesh", "ring"):
+        for t in TRANSPORTS:
             gg, uvs[t], aes[t] = dist_fn(step, phase, t)(uvs[t], aes[t], g)
             outs[t] = gg
-        for t in ("mesh", "ring"):
+        for t in TRANSPORTS:
+            g_tol = Q8_TOL if (t == "ring_q8"
+                               and method == "lgc_rar_q8"
+                               and phase == PHASE_COMPRESSED) else tol
             err = float(jnp.max(jnp.abs(g_sim - outs[t])))
-            assert err < tol, (method, t, step, phase, err)
+            assert err < g_tol, (method, t, step, phase, err)
         # state equivalence: per-node accumulators match the sim stack
-        for t in ("mesh", "ring"):
+        # at the BASE tolerance for every transport — the int8 wire only
+        # perturbs the reduced encoding, never u/v
+        for t in TRANSPORTS:
             err_u = float(jnp.max(jnp.abs(states["sim"]["u"] -
                                           uvs[t]["u"])))
             err_v = float(jnp.max(jnp.abs(states["sim"]["v"] -
@@ -136,6 +158,8 @@ for method in ["none", "sparse_gd", "dgc", "lgc_rar", "lgc_rar_q8",
     wire = C.wire_report()
     if method != "none":
         assert wire.get("ring_allreduce", 0) > 0, (method, wire)
+    if method == "lgc_rar_q8":
+        assert wire.get("ring_allreduce_q8", 0) > 0, (method, wire)
     print(method, "OK", {k: int(v) for k, v in wire.items()})
 print("PASS")
 """, devices=4, timeout=1800)
@@ -174,6 +198,175 @@ assert wire["ring_allreduce"] == expected, (wire, expected)
 print("PASS")
 """, devices=4, timeout=600)
     assert "PASS" in out
+
+
+def test_ring_q8_wire_bytes_and_error_bound(subproc):
+    """ring_allreduce_q8 must (a) record exactly 2*(K-1)*wire_nbytes(
+    ceil(n/K)) bytes — int8 payload + per-block f32 scales, the real
+    int8 wire size; (b) return an exactly replicated result; (c) stay
+    within the analytic quantization bound ~ K/(2*127)*max|partials|."""
+    out = subproc("""
+import jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from repro.dist import collectives as C
+from repro.dist import quantize as Q
+
+K, n, sb = 4, 1000, 64
+mesh = jax.make_mesh((K,), ("data",),
+                     axis_types=(jax.sharding.AxisType.Auto,))
+
+def f(x):
+    return C.ring_allreduce_q8(x[0], "data", op="mean", scale_block=sb)[None]
+
+C.reset_wire_tally()
+g = jax.jit(jax.shard_map(f, mesh=mesh, in_specs=P("data"),
+                          out_specs=P("data"), axis_names={"data"},
+                          check_vma=False))
+x = jax.random.normal(jax.random.PRNGKey(0), (K, n))
+got = g(x)
+ref = jnp.mean(x, 0)
+# (a) measured == int8 wire size, from the shared wire_nbytes
+chunk = (n + K - 1) // K
+assert C.wire_report()["ring_allreduce_q8"] == \\
+    2 * (K - 1) * Q.wire_nbytes(chunk, sb), C.wire_report()
+# (b) exactly replicated (the all-gather circulates ONE quantization)
+for i in range(1, K):
+    assert bool(jnp.all(got[i] == got[0]))
+# (c) bounded error: K quantizations, each <= scale/2 <= max|partial|/254,
+# partial sums bounded by the final |sum| + K*max|x| slack; then /K (mean)
+bound = (jnp.max(jnp.abs(x)) * K) / 254.0 * K / K
+err = float(jnp.max(jnp.abs(got[0] - ref)))
+assert err <= float(bound), (err, float(bound))
+assert err > 0.0   # it IS quantized — a zero error would mean fake bytes
+print("PASS")
+""", devices=4, timeout=600)
+    assert "PASS" in out
+
+
+def test_hierarchical_ring_matches_ring_single_axis(subproc):
+    """On a single dp axis the hierarchical ring IS the plain ring —
+    same schedule, bit-identical result, same recorded bytes (under the
+    same 'ring_allreduce' kind)."""
+    out = subproc("""
+import jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from repro.dist import collectives as C
+
+K, n = 4, 999
+mesh = jax.make_mesh((K,), ("data",),
+                     axis_types=(jax.sharding.AxisType.Auto,))
+x = jax.random.normal(jax.random.PRNGKey(0), (K, n))
+
+def run(fn):
+    C.reset_wire_tally()
+    g = jax.jit(jax.shard_map(lambda v: fn(v[0])[None], mesh=mesh,
+                              in_specs=P("data"), out_specs=P("data"),
+                              axis_names={"data"}, check_vma=False))
+    return g(x), dict(C.wire_report())
+
+ring, wire_ring = run(lambda v: C.ring_allreduce(v, "data", op="mean"))
+hier, wire_hier = run(lambda v: C.hierarchical_ring_allreduce(
+    v, ("data",), op="mean"))
+assert bool(jnp.all(ring == hier))
+assert wire_ring == wire_hier, (wire_ring, wire_hier)
+# chunked messaging changes neither bytes nor bits
+chk, wire_chk = run(lambda v: C.hierarchical_ring_allreduce(
+    v, ("data",), op="mean", intra_chunk_elems=50))
+assert bool(jnp.all(ring == chk))
+assert wire_chk == wire_ring
+print("PASS")
+""", devices=4, timeout=600)
+    assert "PASS" in out
+
+
+def test_hierarchical_ring_two_axis_bytes_beat_chained(subproc):
+    """2x2 (pod x data) mesh: the hierarchical schedule's inter-pod
+    stage moves 1/K_intra of the buffer — strictly fewer bytes than
+    chained full rings — while producing the same mean."""
+    out = subproc("""
+import jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from repro.dist import collectives as C
+
+n = 1000
+mesh = jax.make_mesh((2, 2), ("pod", "data"),
+                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+x = jax.random.normal(jax.random.PRNGKey(0), (2, 2, n))
+ref = jnp.mean(x, (0, 1))
+
+def run(fn):
+    C.reset_wire_tally()
+    g = jax.jit(jax.shard_map(lambda v: fn(v[0, 0])[None, None],
+                              mesh=mesh, in_specs=P("pod", "data"),
+                              out_specs=P("pod", "data"),
+                              axis_names={"pod", "data"},
+                              check_vma=False))
+    return g(x), dict(C.wire_report())
+
+hier, wire_h = run(lambda v: C.hierarchical_ring_allreduce(
+    v, ("pod", "data"), op="mean"))
+chained, wire_c = run(lambda v: C.ring_allreduce_multi(
+    v, ("pod", "data"), op="mean"))
+assert float(jnp.max(jnp.abs(hier[0, 0] - ref))) < 1e-5
+assert float(jnp.max(jnp.abs(chained[0, 0] - ref))) < 1e-5
+c1 = (n + 1) // 2
+assert wire_h["ring_hier_intra"] == 2 * 1 * c1 * 4
+assert wire_h["ring_hier_inter"] == 2 * 1 * ((c1 + 1) // 2) * 4
+assert sum(wire_h.values()) < sum(wire_c.values()), (wire_h, wire_c)
+print("PASS")
+""", devices=4, timeout=600)
+    assert "PASS" in out
+
+
+def test_from_leader_is_accounted_broadcast(subproc):
+    """The leader exchange must be priced as a broadcast —
+    (K-1)/K * nbytes — on BOTH mesh and ring transports, not as a full
+    2(K-1)/K allreduce of the index vector (the old RingTransport
+    behaviour this PR fixes)."""
+    out = subproc("""
+import jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from repro.dist import collectives as C
+from repro.dist.transport import make_transport
+
+K, n = 4, 400
+mesh = jax.make_mesh((K,), ("data",),
+                     axis_types=(jax.sharding.AxisType.Auto,))
+x = jnp.arange(K * n, dtype=jnp.int32).reshape(K, n)
+
+for kind in ("mesh", "ring"):
+    t = make_transport(kind, K, axes=("data",))
+    def f(v, leader):
+        return t.from_leader(v[0], leader)[None]
+    C.reset_wire_tally()
+    g = jax.jit(jax.shard_map(f, mesh=mesh, in_specs=(P("data"), P()),
+                              out_specs=P("data"), axis_names={"data"},
+                              check_vma=False))
+    got = g(x, jnp.asarray(2))
+    assert bool(jnp.all(got == x[2][None])), kind
+    wire = C.wire_report()
+    assert set(wire) == {"broadcast"}, (kind, wire)
+    assert wire["broadcast"] == (K - 1) / K * n * 4, (kind, wire)
+print("PASS")
+""", devices=4, timeout=600)
+    assert "PASS" in out
+
+
+def test_sparse_mean_empty_case_preserves_dtype():
+    """Empty-index sparse_mean must return vals.dtype, not hardcoded
+    f32 — bf16 gradients would otherwise hit a dtype mismatch where the
+    result joins the bf16 dense path."""
+    n = 16
+    sim = SimTransport(K)
+    mesh = make_transport("mesh", K, axes=("data",))
+    for dtype in (jnp.bfloat16, jnp.float32):
+        vals = jnp.zeros((K, 0), dtype)
+        idx = jnp.zeros((K, 0), jnp.int32)
+        assert sim.sparse_mean(vals, idx, n).dtype == dtype
+        # Mesh's empty-case shortcut is per-node shaped (no leading K)
+        assert mesh.sparse_mean(jnp.zeros((0,), dtype),
+                                jnp.zeros((0,), jnp.int32), n).dtype \
+            == dtype
 
 
 # ---------------------------------------------------------------------------
