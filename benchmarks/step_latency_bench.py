@@ -11,9 +11,13 @@ backend's global gradient and accumulator states are compared against
 the jnp oracle over the full phase schedule and the process exits
 nonzero if any divergence exceeds 1e-5.
 
-Timings are interpret-mode on CPU, so the *absolute* numbers are
+Timings default to interpret-mode on CPU, so the *absolute* numbers are
 structural (launch counts, pass structure), not TPU wall-clock; the
-derived ``max_err_vs_jnp`` column is exact either way.
+derived ``max_err_vs_jnp`` column is exact either way.  On a real
+accelerator pass ``--compiled`` to drop ``interpret=True`` and get
+wall-clock rows; the artifact records ``device_kind``/``interpret`` so
+CPU-interpret rows and real-TPU rows are distinguishable in the
+trajectory.
 """
 from __future__ import annotations
 
@@ -41,13 +45,15 @@ STEPS = 4                       # warmup(1) -> topk+AE(2) -> compressed
 TOL = 1e-5
 
 
-def run_method(method: str, backend: str, ae_backend: str = "jnp"):
+def run_method(method: str, backend: str, ae_backend: str = "jnp",
+               interpret: bool = True):
     """Full phase schedule; returns (stacked global grads, final u, v,
     us_per_step of the steady-state last-phase step)."""
     cc = CompressionConfig(method=method, sparsity=0.02,
                            innovation_sparsity=0.002, warmup_steps=1,
                            ae_train_steps=2, topk_backend=backend,
-                           ae_backend=ae_backend)
+                           ae_backend=ae_backend,
+                           topk_interpret=interpret)
     comp = build_compressor(cc, PARAMS, K)
     n = comp.layout.n_total
     states = comp.init_sim_states(jax.random.PRNGKey(0))
@@ -70,27 +76,43 @@ def run_method(method: str, backend: str, ae_backend: str = "jnp"):
 def main(argv=None):
     p = argparse.ArgumentParser(description=__doc__)
     p.add_argument("--out", default="BENCH_step_latency.json")
+    p.add_argument("--compiled", action="store_true",
+                   help="compile the Pallas kernels (drop interpret=True)"
+                        " when a real accelerator is present; on CPU the "
+                        "flag is ignored (interpret mode is the only way "
+                        "the kernels run there)")
     # tolerate foreign flags when run via benchmarks.run's module loop
     args, _ = p.parse_known_args(argv)
 
-    # self-describing artifact: timings run the Pallas kernels in
-    # interpret mode on CPU, which inverts the latency ordering vs
-    # compiled TPU execution (e.g. fused at ~10^5us vs jnp at ~10^3us
-    # here) — without these fields the trajectory reads as a regression
+    device = jax.devices()[0]
+    compiled = bool(args.compiled) and device.platform != "cpu"
+    interpret = not compiled
+
+    # self-describing artifact: device_kind + interpret distinguish
+    # interpret-mode CPU rows (structural: launch counts, pass
+    # structure — interpret overhead inverts the latency ordering vs
+    # compiled execution, e.g. fused at ~10^5us vs jnp at ~10^3us) from
+    # real compiled accelerator rows (wall-clock) — without these fields
+    # the PR-over-PR trajectory reads as a regression
     report = {
         "K": K, "steps": STEPS, "tol": TOL,
-        "interpret": True,
-        "note": ("us_per_step timings are Pallas interpret-mode on CPU: "
-                 "structural (launch counts, pass structure), NOT TPU "
-                 "wall-clock — interpret overhead scales with kernel "
-                 "complexity, so fused/pallas rows are expected to be "
-                 "slower than jnp here; max_err_vs_jnp is exact either "
-                 "way"),
+        "interpret": interpret,
+        "device_kind": device.device_kind,
+        "platform": device.platform,
+        "note": (("us_per_step timings are compiled on "
+                  f"{device.device_kind}: real wall-clock rows")
+                 if compiled else
+                 ("us_per_step timings are Pallas interpret-mode on "
+                  f"{device.device_kind}: structural (launch counts, "
+                  "pass structure), NOT accelerator wall-clock — "
+                  "interpret overhead scales with kernel complexity, so "
+                  "fused/pallas rows are expected to be slower than jnp "
+                  "here; max_err_vs_jnp is exact either way")),
         "methods": {},
     }
     failures = []
     for method in METHODS:
-        oracle = run_method(method, "jnp")
+        oracle = run_method(method, "jnp", interpret=interpret)
         # "none" never touches a selection kernel: one baseline row only
         variants = [("jnp", "jnp", "jnp")] if method == "none" \
             else [(b, "jnp", b) for b in BACKENDS]
@@ -100,7 +122,8 @@ def main(argv=None):
         entry = {}
         for backend, ae_backend, label in variants:
             res = oracle if (backend, ae_backend) == ("jnp", "jnp") \
-                else run_method(method, backend, ae_backend)
+                else run_method(method, backend, ae_backend,
+                                interpret=interpret)
             gs, u, v, us = res
             err = max(float(jnp.max(jnp.abs(a - b)))
                       for a, b in zip(oracle[:3], (gs, u, v)))

@@ -24,7 +24,7 @@ python -m benchmarks.kernels_bench
 echo "=== step-latency bench (fused/pallas gated vs jnp oracle at 1e-5) ==="
 python -m benchmarks.step_latency_bench --out BENCH_step_latency.json
 
-echo "=== transport gate (mesh/ring/ring_hier exact, ring_q8 quant-tol) ==="
+echo "=== transport gate (mesh/ring/ring_hier/ring_packed exact, ring_q8 quant-tol, packed <=0.35x f32 sparse wire) ==="
 python -m benchmarks.transports_bench
 
 echo "=== LGC end-to-end smoke (every distributed transport) ==="
@@ -38,5 +38,16 @@ done
 python -m repro.launch.train --arch llama3.2-1b --smoke --steps 12 \
     --batch 4 --seq 64 --compression lgc_rar_q8 --warmup-steps 2 \
     --ae-train-steps 4 --data-shards 2 --transport ring_q8
+# the packed sparse wire end-to-end: dgc's top-k exchange ships
+# bit-packed indices + int8 values on ring_packed
+python -m repro.launch.train --arch llama3.2-1b --smoke --steps 12 \
+    --batch 4 --seq 64 --compression dgc --warmup-steps 2 \
+    --data-shards 2 --transport ring_packed
+# multi-axis dp from the driver: ring_hier's intra/inter-pod schedule on
+# a real (pod x data x model) host mesh via --pod-shards
+python -m repro.launch.train --arch llama3.2-1b --smoke --steps 12 \
+    --batch 4 --seq 64 --compression lgc_rar --warmup-steps 2 \
+    --ae-train-steps 4 --pod-shards 2 --data-shards 2 \
+    --transport ring_hier
 
 echo "CI OK"

@@ -173,16 +173,19 @@ class CompressionConfig:
     # paper's explicit chunked ring schedule, wire bytes measured by
     # repro.dist.collectives), "ring_q8" (ring whose compressed-payload
     # reductions ship int8 values + per-block f32 scales — the transport
-    # that makes lgc_rar_q8's 1-byte/value rate claim real) or
-    # "ring_hier" (hierarchical intra-pod/inter-pod rings on multi-axis
-    # dp meshes; last mesh axis = intra-pod).  The single-host emulation
-    # transport ("sim") is selected via GradientCompressor.sim_step, not
-    # here.
+    # that makes lgc_rar_q8's 1-byte/value rate claim real), "ring_hier"
+    # (hierarchical intra-pod/inter-pod rings on multi-axis dp meshes;
+    # last mesh axis = intra-pod) or "ring_packed" (the packed sparse
+    # wire: sparse_gd/dgc/lgc_ps top-k exchanges ship bit-packed indices
+    # + int8 values + per-block f32 scales, ~0.33x of the raw f32+int32
+    # exchange at 1M params).  The single-host emulation transport
+    # ("sim") is selected via GradientCompressor.sim_step, not here.
     transport: str = "mesh"
     # int8-wire scale granularity: one f32 scale per this many values
-    # (0 = repro.dist.quantize.SCALE_BLOCK).  Shared by the real wire
-    # (ring_q8) and the fake-quant path, so their numerics are comparable
-    # and rate.py's byte accounting matches the measured tally.
+    # (0 = repro.dist.quantize.SCALE_BLOCK).  Shared by the real wires
+    # (ring_q8's reductions, ring_packed's sparse values) and the
+    # fake-quant paths, so their numerics are comparable and rate.py's
+    # byte accounting matches the measured tally.
     q8_scale_block: int = 0
     # hierarchical-ring per-level message chunking, in elements
     # (0 = one message per hop; bytes are unchanged either way)

@@ -26,10 +26,18 @@ the :class:`repro.dist.transport.Transport` protocol.  The substrate —
     fake.
   * ``RingHierTransport``  hierarchical intra-pod/inter-pod rings on
     multi-axis dp meshes.
+  * ``RingPackedTransport``  the packed sparse wire: the top-k exchanges
+    of sparse_gd/dgc/lgc_ps (and their exempt-last traffic) ship
+    bit-packed indices + int8 values + per-block f32 scales through a
+    ppermute ring, so the ceil(log2 n)-bit + 1-byte/value rate claim is
+    measured, not fake.  Indices stay bit-exact; values pay the wire's
+    one documented q8 quantization — ONLY on this transport.  On every
+    other transport the same exchanges move exact f32 pairs, so the
+    sparse methods remain bit-exact reproductions by default.
   * ``SimTransport``   stacked (K, n) single-host arrays (the paper's own
     experiments emulate several nodes per GPU the same way).  Used by the
     convergence benchmarks; tests assert sim == mesh == ring == ring_hier
-    (ring_q8 within the quantization bound).
+    (ring_q8 / ring_packed within their quantization bounds).
 
 ``dist_step`` / ``sim_step`` are thin wrappers that build the transport
 and call ``step`` — kept as the public API the launchers and tests use.
@@ -58,9 +66,17 @@ from repro.configs.base import CompressionConfig
 from repro.core import autoencoder as AE
 from repro.core import sparsify as SP
 from repro.core.phases import (PHASE_COMPRESSED, PHASE_TOPK_AE, PHASE_WARMUP)
+# PACKED_METHODS: the methods whose sparse exchanges ride the packed
+# wire (real packed bytes + the one q8 value quantization on
+# RingPackedTransport; exact f32 pairs everywhere else); the lgc_rar
+# family's cross-node exchange is the dense encoding reduction, which
+# the int8 ring (mean_q8) already covers.  Defined beside the codec so
+# rate.py prices exactly the set dispatched here.
+from repro.dist.packed import PACKED_METHODS
 from repro.dist.transport import Transport, make_transport
 
 Axis = Sequence[str]
+
 
 
 @dataclass(frozen=True)
@@ -211,7 +227,13 @@ class GradientCompressor:
         # traffic back on the wire)
         dense_seg = t.pernode(lambda gg: SP.dense_segments(gg, layout))(g)
         g_dense = SP.scatter_dense_segments(t.mean(dense_seg), layout, n)
-        last_global = t.sparse_mean(last_vals, last_idx, n)
+        # the sparse methods' top-k exchanges (exempt-last included) ride
+        # the packed wire: bit-packed indices + int8 values on
+        # ring_packed (the wire's documented q8 bound), exact f32 pairs
+        # on every other transport
+        packed = cc.method in PACKED_METHODS
+        sparse_mean = t.sparse_mean_packed if packed else t.sparse_mean
+        last_global = sparse_mean(last_vals, last_idx, n)
 
         # combined clear: compressed + exempt-last index sets zeroed in a
         # single scatter pass over each accumulator (2 passes, not 4)
@@ -223,7 +245,7 @@ class GradientCompressor:
         if cc.method in ("sparse_gd", "dgc"):
             vals, idx = (f_vals, f_idx) if fused \
                 else t.pernode(self._select)(v)
-            global_g = t.sparse_mean(vals, idx, n) + g_dense + last_global
+            global_g = sparse_mean(vals, idx, n) + g_dense + last_global
             u, v = clear_own(u, v, idx, last_idx)
             return global_g, {**state, "u": u, "v": v}, stats
 
@@ -246,9 +268,13 @@ class GradientCompressor:
 
         is_ps = cc.method == "lgc_ps"
         if is_ps:
-            frac = cc.innovation_sparsity / max(cc.sparsity, 1e-12)
-            inno = t.pernode(
-                lambda x: SP.select_innovation(x, frac)[0])(vals)
+            frac = SP.innovation_frac(cc.innovation_sparsity, cc.sparsity)
+
+            def _innovation(x):
+                vec, ii = SP.select_innovation(x, frac)
+                return vec, x[ii], ii          # in-place vec + sparse pair
+
+            inno, inno_vals, inno_idx = t.pernode(_innovation)(vals)
 
         if phase == PHASE_TOPK_AE:
             # top-k updates + online AE training on the gathered vectors.
@@ -274,9 +300,13 @@ class GradientCompressor:
             # Fig. 8: the leader worker ships E_c(g~); every worker ships
             # its innovation; the master decodes per node and averages the
             # reconstructions (eqs. 12-13) over the shared index support.
+            # The innovation exchange is sparse (k_inv values + local
+            # indices within the mu_pad support) and rides the packed
+            # wire — NOT a mu_pad-length in-place f32 all_gather.
             z_own = t.pernode(encode)(vals)
             z_common = t.from_leader(z_own, leader)
-            inno_nodes = t.all_gather(inno)                  # (K, mu_pad)
+            inno_nodes = t.sparse_gather_packed(
+                inno_vals, inno_idx, layout.mu_pad)          # (K, mu_pad)
             recs = AE.lgc_decode_ps(state["ae"], z_common, inno_nodes)
             rec_dense = SP.scatter_to_dense(recs.mean(0), idx, n)
         else:
@@ -309,7 +339,7 @@ class GradientCompressor:
         ``node_index`` overrides the shard's linear index over ``axes``
         (pass it when the caller already computed it).  ``transport``
         overrides ``CompressionConfig.transport`` ("mesh", "ring",
-        "ring_q8" or "ring_hier")."""
+        "ring_q8", "ring_hier" or "ring_packed")."""
         kind = transport if transport is not None else \
             (self.cc.transport or "mesh")
         if kind == "sim":
@@ -319,7 +349,8 @@ class GradientCompressor:
         t = make_transport(kind, self.K, axes, ae_axes, node_index,
                            scale_block=self.cc.q8_scale_block,
                            intra_chunk=self.cc.ring_intra_chunk,
-                           inter_chunk=self.cc.ring_inter_chunk)
+                           inter_chunk=self.cc.ring_inter_chunk,
+                           interpret=self.cc.topk_interpret)
         return self.step(t, state, g, step, phase)
 
     def sim_step(self, states, g_nodes: jnp.ndarray, step, phase: str):
@@ -327,7 +358,8 @@ class GradientCompressor:
         states: PyTree stacked over K (u, v per node; ae stored once).
         Returns (global_g (n,), states, stats)."""
         t = make_transport("sim", self.K,
-                           scale_block=self.cc.q8_scale_block)
+                           scale_block=self.cc.q8_scale_block,
+                           interpret=self.cc.topk_interpret)
         return self.step(t, states, g_nodes, step, phase)
 
 

@@ -8,8 +8,13 @@ DEFLATE byte counts.
 
 Per-node per-iteration payloads:
   baseline    n * 4 bytes
-  sparse_gd   k_total * 4 + deflate(indices)
-  dgc         k_total * 4 + deflate(indices)
+  sparse_gd   k_total * 4 + deflate(indices)   [f32 wires]
+  dgc         k_total * 4 + deflate(indices)   [f32 wires]
+              — on the packed wire ("ring_packed") both price the REAL
+              payload instead: Q.wire_nbytes(k) int8 values +
+              packed.index_nbytes (bucket counts + bit-packed low bits),
+              which also *replaces* the deflate estimate (the wire
+              structurally realizes the ~ceil(log2 n)-bit index cost)
   lgc_rar     mu/16*4 floats * 4 bytes + deflate(leader indices)/K
               (the leader broadcasts the shared index set once; amortized
               across the K nodes as in the paper's rate accounting)
@@ -20,7 +25,8 @@ Per-node per-iteration payloads:
               and this module says so (the measured-vs-accounted fix)
   lgc_ps      leader node:   mu/4 floats * 4 + innovation payload
               other nodes:   innovation payload only
-              innovation payload = k_inv * 4 + deflate(inno indices)
+              innovation payload = k_inv * 4 + deflate(inno indices),
+              or the real packed innovation payload on "ring_packed"
 
 :func:`wire_payload_terms` is the executable contract between this
 payload accounting and the trace-time wire tally in
@@ -39,7 +45,8 @@ import numpy as np
 
 from repro.configs.base import CompressionConfig
 from repro.core import autoencoder as AE
-from repro.core.sparsify import GradientLayout
+from repro.core.sparsify import GradientLayout, innovation_frac, innovation_k
+from repro.dist import packed as PK
 from repro.dist import quantize as Q
 
 BYTES_F32 = 4
@@ -77,23 +84,46 @@ def rate_report(cc: CompressionConfig, layout: GradientLayout, K: int,
     layer's dense gradient from the transmitted rate; True (default) is
     the honest total including it.
 
-    ``transport`` (default: ``cc.transport``) decides what the encoding
-    bytes *really* are for ``lgc_rar_q8``: ~1 byte/value + per-block
-    scale overhead on the int8 wire ("ring_q8"), the full 4 bytes/value
-    on every float-wire transport — fake quantization saves nothing on
-    the wire, and this report no longer pretends it does."""
+    ``transport`` (default: ``cc.transport``) decides what the
+    compressed payloads *really* are: for ``lgc_rar_q8`` the encoding
+    costs ~1 byte/value + per-block scale overhead on the int8 wire
+    ("ring_q8") and the full 4 bytes/value on every float-wire
+    transport; for the sparse methods (sparse_gd/dgc/lgc_ps) the top-k
+    and innovation exchanges cost their real packed size — int8 values
+    + bucket counts + bit-packed low index bits — on the packed wire
+    ("ring_packed"), and f32 values + DEFLATE-estimated indices
+    elsewhere.  Fake quantization saves nothing on the wire, and this
+    report no longer pretends it does."""
     n = layout.n_total
     baseline = n * BYTES_F32
+    tkind = transport if transport is not None else cc.transport
+    sb = cc.q8_scale_block or Q.SCALE_BLOCK
+    on_packed_wire = (tkind == "ring_packed"
+                      and cc.method in PK.PACKED_METHODS)
     dense_bytes = (sum(l.size for l in layout.dense) * BYTES_F32
                    if count_exempt else 0)
-    last_bytes = (layout.k_last * (BYTES_F32)
-                  + deflate_bytes(None, layout.k_last, n))
+    if on_packed_wire:
+        last_bytes = (PK.wire_nbytes(PK.make_plan(n, layout.k_last, sb))
+                      if layout.k_last else 0)
+    else:
+        last_bytes = (layout.k_last * (BYTES_F32)
+                      + deflate_bytes(None, layout.k_last, n))
     k_total = layout.mu
-    idx_bytes = deflate_bytes(indices, k_total, n)
 
     if cc.method == "none":
         b = baseline
         return RateReport(cc.method, b, b, b, baseline, 1.0, 1.0, 1.0)
+
+    if cc.method in ("sparse_gd", "dgc") and on_packed_wire:
+        # the REAL payload: mu_pad (value, index) pairs — sentinel
+        # padding included — at int8 + packed-index wire size, from
+        # the same plan the transport ships (no deflate estimate)
+        b = dense_bytes + last_bytes + PK.wire_nbytes(
+            PK.make_plan(n, layout.mu_pad, sb))
+        cr = baseline / b
+        return RateReport(cc.method, b, b, b, baseline, cr, cr, cr)
+
+    idx_bytes = deflate_bytes(indices, k_total, n)
 
     if cc.method in ("sparse_gd", "dgc"):
         b = dense_bytes + last_bytes + k_total * BYTES_F32 + idx_bytes
@@ -102,7 +132,6 @@ def rate_report(cc: CompressionConfig, layout: GradientLayout, K: int,
 
     mu_pad = layout.mu_pad
     z_floats = AE.compressed_length(mu_pad)
-    tkind = transport if transport is not None else cc.transport
     if cc.method == "lgc_rar_q8" and tkind == "ring_q8":
         z_payload = Q.wire_nbytes(z_floats,
                                   cc.q8_scale_block or Q.SCALE_BLOCK)
@@ -122,10 +151,14 @@ def rate_report(cc: CompressionConfig, layout: GradientLayout, K: int,
         # ships its innovation values with LOCAL indices (log2(mu) bits).
         # This is the reading under which the paper's 0.012MB-per-node /
         # 17000x numbers close (see DESIGN.md / compressors.py).
-        k_inv = max(1, int(round(
-            mu_pad * cc.innovation_sparsity / max(cc.sparsity, 1e-12))))
-        inno_bytes = (k_inv * BYTES_F32
-                      + deflate_bytes(inno_indices, k_inv, mu_pad))
+        k_inv = innovation_k(mu_pad,
+                             innovation_frac(cc.innovation_sparsity,
+                                             cc.sparsity))
+        if on_packed_wire:
+            inno_bytes = PK.wire_nbytes(PK.make_plan(mu_pad, k_inv, sb))
+        else:
+            inno_bytes = (k_inv * BYTES_F32
+                          + deflate_bytes(inno_indices, k_inv, mu_pad))
         b_leader = (dense_bytes + last_bytes + z_floats * BYTES_F32
                     + idx_bytes + inno_bytes)
         b_other = dense_bytes + last_bytes + inno_bytes
@@ -167,9 +200,15 @@ def wire_payload_terms(cc: CompressionConfig, layout: GradientLayout,
       * reductions pay the ring factor 2(Ka-1)/Ka per axis plus chunk
         zero-padding to a multiple of Ka, vs the rate's flat per-node
         payload;
-      * the exempt-last and sparse/dgc exchanges move through all_gather
-        — (K-1)x values AND raw int32 indices — while the rate prices
-        one node's DEFLATE-coded send (the wire does not entropy-code);
+      * on the FLOAT wires only, the exempt-last and sparse/dgc
+        exchanges move through all_gather — (K-1)x f32 values AND raw
+        int32 indices — while the rate prices one node's DEFLATE-coded
+        send.  On the packed wire ("ring_packed") this slack is CLOSED:
+        both sides price the identical ``packed.wire_nbytes`` payload
+        (int8 values + bucket counts + bit-packed low index bits), so
+        measured and accounted sparse-exchange bytes agree by
+        construction — the rate's entropy-coded index claim made
+        structural;
       * the leader index set ships as a raw int32 broadcast at
         (K-1)/K·nbytes, vs the rate's deflate(idx)/K amortization;
       * the ``lgc_rar_q8`` encoding term uses the same
@@ -178,15 +217,29 @@ def wire_payload_terms(cc: CompressionConfig, layout: GradientLayout,
         wire, measured and accounted bytes agree by construction.
     """
     tkind = transport if transport is not None else cc.transport
-    assert tkind in ("ring", "ring_q8", "ring_hier"), tkind
+    assert tkind in ("ring", "ring_q8", "ring_hier", "ring_packed"), tkind
     Ks = tuple(axis_sizes) if axis_sizes else (K,)
     assert int(np.prod(Ks)) == K, (Ks, K)
     sb = cc.q8_scale_block or Q.SCALE_BLOCK
+    packed_wire = (tkind == "ring_packed"
+                   and cc.method in PK.PACKED_METHODS)
     terms: Dict[str, float] = {}
 
     def add(kind: str, b: float) -> None:
         if b:
             terms[kind] = terms.get(kind, 0.0) + float(b)
+
+    def sparse_exchange(n_vec: int, k: int) -> None:
+        """One packed-path sparse exchange of k pairs over a length-n_vec
+        vector: real packed payload on ring_packed, f32 values + raw
+        int32 indices on the float wires (the exact f32 path)."""
+        if k <= 0:
+            return
+        if packed_wire:
+            add("all_gather_packed",
+                (K - 1) * PK.wire_nbytes(PK.make_plan(n_vec, k, sb)))
+        else:
+            add("all_gather", (K - 1) * k * (BYTES_F32 + BYTES_I32))
 
     def reduce_f32(n_vals: int, itemsize: int = BYTES_F32) -> None:
         if n_vals <= 0:
@@ -218,14 +271,17 @@ def wire_payload_terms(cc: CompressionConfig, layout: GradientLayout,
 
     # exempt-dense segments: reduced as a d-length f32 vector
     reduce_f32(sum(l.size for l in layout.dense))
-    # exempt-last: sparse_mean all-gathers k_last values + int32 indices
-    if layout.k_last:
+    mp = layout.mu_pad
+    if cc.method in PK.PACKED_METHODS:
+        # exempt-last rides the packed sparse path for these methods
+        sparse_exchange(layout.n_total, layout.k_last)
+    elif layout.k_last:
+        # lgc_rar family: exempt-last stays a raw f32+int32 all_gather
         add("all_gather",
             (K - 1) * layout.k_last * (BYTES_F32 + BYTES_I32))
 
-    mp = layout.mu_pad
     if cc.method in ("sparse_gd", "dgc"):
-        add("all_gather", (K - 1) * mp * (BYTES_F32 + BYTES_I32))
+        sparse_exchange(layout.n_total, mp)
         return terms
 
     # lgc family: the rotating leader's index set is a raw i32 broadcast
@@ -233,7 +289,11 @@ def wire_payload_terms(cc: CompressionConfig, layout: GradientLayout,
     zl = AE.compressed_length(mp)
     if cc.method == "lgc_ps":
         add("broadcast", (K - 1) / K * zl * BYTES_F32)   # z_common
-        add("all_gather", (K - 1) * mp * BYTES_F32)      # innovations
+        # innovations: k_inv sparse pairs with mu_pad-local indices —
+        # the SAME rounding select_innovation ships (shared helper)
+        k_inv = innovation_k(mp, innovation_frac(cc.innovation_sparsity,
+                                                 cc.sparsity))
+        sparse_exchange(mp, k_inv)
     elif cc.method == "lgc_rar_q8" and tkind == "ring_q8":
         reduce_q8(zl)
     else:

@@ -391,14 +391,26 @@ def gather_at(v: jnp.ndarray, indices: jnp.ndarray) -> jnp.ndarray:
     return jnp.where(indices < v.shape[0], vals, 0.0)
 
 
+def innovation_frac(innovation_sparsity: float, sparsity: float) -> float:
+    """The PS innovation fraction of the top-k support."""
+    return innovation_sparsity / max(sparsity, 1e-12)
+
+
+def innovation_k(mu: int, frac: float) -> int:
+    """Static innovation count for a length-``mu`` support.  ONE rounding
+    for the compressor (select_innovation) and the byte accounting
+    (core.rate) — evaluated with the same float association, so the
+    accounted payload can never be off by one from the shipped one."""
+    return max(1, int(round(mu * frac)))
+
+
 def select_innovation(values: jnp.ndarray, frac: float):
     """PS innovation: the top ``frac`` fraction (by magnitude) of the top-k
     values vector, kept in-place (zeros elsewhere) — Section V / Fig. 5a.
 
     Returns (innovation vector (mu_pad,), local indices (k_inv,)).
     """
-    mu = values.shape[0]
-    k_inv = max(1, int(round(mu * frac)))
+    k_inv = innovation_k(values.shape[0], frac)
     _, idx = jax.lax.top_k(jnp.abs(values), k_inv)
     inno = jnp.zeros_like(values).at[idx].set(values[idx])
     return inno, idx

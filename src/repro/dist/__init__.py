@@ -3,11 +3,15 @@
   sharding     parameter/batch/cache PartitionSpec rules + local shapes
   collectives  explicit ring allreduce, accounted lax wrappers, wire-byte
                tally
+  quantize     symmetric int8 block quantization (fake + real int8 wire)
+  packed       the packed sparse wire codec (bit-packed indices + int8
+               values) shared by the fake and real packed exchanges
   transport    the Transport protocol (Mesh / Ring / Sim) the gradient
                compressors are written against
 """
 from repro.dist.collectives import (
     all_gather,
+    all_gather_packed,
     broadcast,
     hierarchical_ring_allreduce,
     pmean,
@@ -33,6 +37,7 @@ from repro.dist.transport import (
     TRANSPORTS,
     MeshTransport,
     RingHierTransport,
+    RingPackedTransport,
     RingQ8Transport,
     RingTransport,
     SimTransport,

@@ -1,0 +1,161 @@
+"""The packed sparse wire codec: (values, indices) -> real wire payload.
+
+Only ``RingPackedTransport`` ships the payload built here; every other
+transport moves the same sparse pairs as exact f32 values + raw int32
+indices, so the sparse methods stay bit-exact reproductions unless a
+run explicitly opts into the packed wire.  Indices decode bit-exact;
+values pay exactly one int8 block quantization (error <= half the
+per-block scale — the transport gate's documented q8 bound vs the exact
+Sim oracle).  The byte accounting (:func:`wire_nbytes`) is shared with
+``repro.core.rate``, so measured == accounted on this wire with no
+slack.
+
+Wire format for k (value, index) pairs over a length-n vector, chosen
+per (n, k) at trace time by :func:`make_plan`:
+
+  counts   (n_buckets,) int32 — histogram of the *sorted* indices' high
+           ``width - lo_bits`` bits.  The receiver re-expands the high
+           bits with a fixed-length ``jnp.repeat`` (counts sum to k —
+           static), so high bits cost 4·n_buckets bytes TOTAL, not
+           per-index.
+  words    (lo_bits, W) int32 — the indices' low bits through the
+           bit-plane pack kernel (``kernels/bitpack.py``), ~lo_bits bits
+           per index.
+  q, scales  the values through the shared int8 block quantizer
+           (``repro.dist.quantize``): 1 byte/value + one f32 scale per
+           ``scale_block`` values.
+
+Pairs are sorted by index before encoding (scatter consumers are
+order-free), which is what makes the high bits monotone and
+histogram-expressible — the same idea as the Elias-Fano upper structure,
+but with fixed shapes end to end so it lives happily inside jit/
+shard_map.  ``make_plan`` picks ``lo_bits`` by exact cost minimization
+over the (static) (n, k); at n=1M, k=8K the indices cost ~13 bits each
+vs 32 raw, and the whole payload lands at ~0.33x of the f32+int32
+exchange (gated in ``benchmarks/transports_bench.py``).
+
+Index roundtrip is bit-exact for any indices in ``[0, n]`` (the
+``select_topk`` sentinel ``n`` included); values pay exactly one
+quantization, bounded by half the per-block scale.  When k is so small
+that the pack kernels' lane floor would cost more than raw int32,
+``make_plan`` falls back to shipping the sorted indices raw (values
+stay int8), so the packed wire is never worse than 4 bytes/index.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist import quantize as Q
+from repro.kernels import bitpack as BP
+
+# the compressor methods whose sparse exchanges ride this codec (real
+# bytes on RingPackedTransport, the fake path elsewhere) — shared by the
+# compressor's transport dispatch AND rate.py's byte accounting, so the
+# two can never disagree about which exchanges are packed
+PACKED_METHODS = ("sparse_gd", "dgc", "lgc_ps")
+
+
+@dataclass(frozen=True)
+class PackPlan:
+    """Static wire-format parameters for a (n, k, scale_block) exchange."""
+    n: int                  # dense length; indices live in [0, n]
+    k: int                  # pairs per node (sentinel padding included)
+    width: int              # bit_width(n): total index bits
+    lo_bits: int            # bits packed through the bit-plane kernel
+    n_buckets: int          # high-bits histogram length
+    scale_block: int        # values per f32 scale (shared with quantize)
+    raw_index: bool = False  # small-k fallback: sorted raw int32 indices
+
+    @property
+    def hi_bits(self) -> int:
+        return self.width - self.lo_bits
+
+
+def _index_nbytes(n: int, k: int, lo_bits: int) -> int:
+    n_buckets = (n >> lo_bits) + 1
+    return 4 * n_buckets + BP.packed_nbytes(k, lo_bits)
+
+
+def make_plan(n: int, k: int, scale_block: int = 0) -> PackPlan:
+    """Pick ``lo_bits`` minimizing the exact index payload
+    (4·n_buckets + packed_nbytes(k, lo_bits)) — all quantities static,
+    so the scan runs at trace time and the optimum is exact.  When the
+    pack kernels' 128-word lane floor makes even the best packed layout
+    cost more than raw int32 indices (small k), the plan falls back to
+    shipping the sorted indices raw — the packed wire is never worse
+    than 4 bytes/index, so sub-lane exchanges (k_inv, small k_last)
+    don't pay the plane floor."""
+    assert n >= 1 and k >= 1, (n, k)
+    width = BP.bit_width(n)
+    best = min(range(1, width + 1),
+               key=lambda lo: _index_nbytes(n, k, lo))
+    return PackPlan(n=n, k=k, width=width, lo_bits=best,
+                    n_buckets=(n >> best) + 1,
+                    scale_block=scale_block or Q.SCALE_BLOCK,
+                    raw_index=4 * k < _index_nbytes(n, k, best))
+
+
+def index_nbytes(plan: PackPlan) -> int:
+    """Wire bytes of the index half: counts + packed low-bit planes, or
+    the raw int32 indices when the fallback is cheaper."""
+    if plan.raw_index:
+        return 4 * plan.k
+    return _index_nbytes(plan.n, plan.k, plan.lo_bits)
+
+
+def wire_nbytes(plan: PackPlan) -> int:
+    """Total payload bytes one node ships per packed sparse exchange —
+    exactly the sum of the encoded arrays' nbytes (asserted against the
+    trace-time tally term by term in tests/test_wire_accounting.py)."""
+    return index_nbytes(plan) + Q.wire_nbytes(plan.k, plan.scale_block)
+
+
+def _sort_pairs(vals: jnp.ndarray, idx: jnp.ndarray):
+    order = jnp.argsort(idx)
+    return jnp.take(vals, order), jnp.take(idx, order).astype(jnp.int32)
+
+
+def encode_sparse(vals: jnp.ndarray, idx: jnp.ndarray, plan: PackPlan,
+                  interpret: bool = True):
+    """-> the real wire payload: (counts, words, q, scales), or
+    (idx, q, scales) on the small-k raw-index fallback."""
+    assert vals.shape == idx.shape == (plan.k,), (vals.shape, plan)
+    vals_s, idx_s = _sort_pairs(vals, idx)
+    q, scales = Q.quantize_i8(vals_s, plan.scale_block)
+    if plan.raw_index:
+        return idx_s, q, scales
+    hi = idx_s >> plan.lo_bits
+    counts = jnp.zeros((plan.n_buckets,), jnp.int32).at[hi].add(1)
+    words = BP.pack_bits(idx_s & ((1 << plan.lo_bits) - 1), plan.lo_bits,
+                         interpret=interpret)
+    return counts, words, q, scales
+
+
+def decode_sparse(payload, plan: PackPlan, interpret: bool = True
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Inverse of :func:`encode_sparse` -> (vals f32 (k,), idx int32
+    (k,)) in index-sorted order: indices bit-exact, values dequantized."""
+    if plan.raw_index:
+        idx, q, scales = payload
+    else:
+        counts, words, q, scales = payload
+        lo = BP.unpack_bits(words, plan.k, interpret=interpret)
+        hi = jnp.repeat(jnp.arange(plan.n_buckets, dtype=jnp.int32),
+                        counts, total_repeat_length=plan.k)
+        idx = (hi << plan.lo_bits) | lo
+    return Q.dequantize_i8(q, scales, plan.k), idx
+
+
+def fake_roundtrip(vals: jnp.ndarray, idx: jnp.ndarray,
+                   scale_block: int = 0):
+    """The float-domain mirror of encode->decode (sort pairs by index,
+    quantize->dequantize the sorted values with the wire's exact
+    blocks).  Not on any transport path — float wires ship exact pairs —
+    but the executable definition of the wire's value error, used by the
+    codec tests."""
+    vals_s, idx_s = _sort_pairs(vals, idx)
+    return Q.fake_quantize(vals_s, scale_block or Q.SCALE_BLOCK), idx_s

@@ -1,0 +1,129 @@
+"""Bit-packing kernels (TPU Pallas): int32 values <-> b-bit packed words.
+
+The sparse exchanges (sparse_gd / dgc / lgc_ps, plus every method's
+exempt-last top-k) ship index sets whose entries fit in
+``ceil(log2 n)`` bits, yet the f32 wire moves raw int32 — the
+"documented slack" between ``rate.py``'s entropy-coded accounting and
+the measured tally.  These kernels close that gap structurally with a
+*bit-plane* layout that is exactly vectorizable on the VPU:
+
+  pack    values reshaped (GROUP=32, W) column-major-by-word; plane b,
+          word j collects bit b of the 32 values in column j:
+          ``word[b, j] = sum_r ((x[r, j] >> b) & 1) << r``  — one shift/
+          mask/weighted-sum over a (GROUP, LANE) = (32, 128) int32
+          block per plane (four native (8, 128) sublane tiles).
+  unpack  the exact inverse: ``x[r, j] = sum_b ((word[b, j] >> r) & 1)
+          << b``.
+
+The packed representation of k values at width b is ``b`` planes of
+``ceil(k/32)`` int32 words (lane-padded to 128), i.e. ~``b`` bits per
+value + padding — this IS the wire payload the packed transports
+ppermute, and :func:`packed_nbytes` is the single accounting source of
+truth shared by the trace-time tally and ``repro.core.rate``.
+
+Exactness contract: for any values in ``[0, 2**width)`` the roundtrip
+``unpack(pack(x, width), k) == x`` is bit-exact (property-tested over
+widths 1..31, unaligned k, all-zero and all-max inputs in
+``tests/test_bitpack.py``).  Bit 31 is deliberately unsupported as a
+*value* bit (int32 sign); widths run 1..31, enough for any index
+``<= n`` at any real model scale.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANE = 128            # TPU lane count: words per plane per grid step
+GROUP = 32            # values packed into one int32 word (one per bit row)
+MAX_WIDTH = 31        # value bits; bit 31 is the int32 sign
+
+
+def bit_width(n: int) -> int:
+    """Bits needed to represent any value in ``[0, n]`` — *inclusive*,
+    because the sparsifier pads index sets with the sentinel ``n``
+    (``select_topk``'s mu_pad padding), which must survive the wire."""
+    w = max(1, int(n).bit_length())
+    assert w <= MAX_WIDTH, (n, w)
+    return w
+
+
+def word_count(k: int) -> int:
+    """int32 words per bit-plane for ``k`` values: ceil(k/GROUP),
+    lane-padded to a multiple of LANE (the tile the kernels sweep)."""
+    return -(-max(int(k), 1) // GROUP // LANE) * LANE
+
+
+def packed_nbytes(k: int, width: int) -> int:
+    """Wire bytes of the packed representation of ``k`` values at
+    ``width`` bits — exactly the (width, W) int32 array the packed
+    transports put on the wire, padding included.  Single source of
+    truth for the trace-time tally and ``repro.core.rate``."""
+    return width * word_count(k) * 4
+
+
+def _pack_kernel(x_ref, out_ref, *, width: int):
+    x = x_ref[...]                                      # (GROUP, LANE) i32
+    r = jax.lax.broadcasted_iota(jnp.int32, (GROUP, LANE), 0)
+    planes = []
+    for b in range(width):
+        bits = (x >> b) & 1
+        planes.append(jnp.sum(bits << r, axis=0))       # (LANE,) i32
+    out_ref[...] = jnp.stack(planes)                    # (width, LANE)
+
+
+def _unpack_kernel(w_ref, out_ref, *, width: int):
+    w = w_ref[...]                                      # (width, LANE) i32
+    r = jax.lax.broadcasted_iota(jnp.int32, (GROUP, LANE), 0)
+    acc = jnp.zeros((GROUP, LANE), jnp.int32)
+    for b in range(width):
+        bits = (w[b][None, :] >> r) & 1                 # arithmetic >>; &1
+        acc = acc | (bits << b)
+    out_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("width", "interpret"))
+def pack_bits(x: jnp.ndarray, width: int, interpret: bool = True
+              ) -> jnp.ndarray:
+    """Pack ``x``: (k,) int32 values in ``[0, 2**width)`` into a
+    (width, word_count(k)) int32 bit-plane array.  Values beyond the
+    width are truncated (callers pick ``width = bit_width(max value)``).
+    """
+    assert 1 <= width <= MAX_WIDTH, width
+    k = x.shape[0]
+    W = word_count(k)
+    pad = GROUP * W - k
+    flat = jnp.concatenate([x.astype(jnp.int32),
+                            jnp.zeros((pad,), jnp.int32)]) if pad else \
+        x.astype(jnp.int32)
+    kern = functools.partial(_pack_kernel, width=width)
+    return pl.pallas_call(
+        kern,
+        grid=(W // LANE,),
+        in_specs=[pl.BlockSpec((GROUP, LANE), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((width, LANE), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((width, W), jnp.int32),
+        interpret=interpret,
+    )(flat.reshape(GROUP, W))
+
+
+@functools.partial(jax.jit, static_argnames=("k", "interpret"))
+def unpack_bits(words: jnp.ndarray, k: int, interpret: bool = True
+                ) -> jnp.ndarray:
+    """Inverse of :func:`pack_bits`: (width, W) int32 planes -> the
+    first ``k`` original values, bit-exact."""
+    width, W = words.shape
+    assert 1 <= width <= MAX_WIDTH, width
+    assert W % LANE == 0 and GROUP * W >= k, (W, k)
+    kern = functools.partial(_unpack_kernel, width=width)
+    out = pl.pallas_call(
+        kern,
+        grid=(W // LANE,),
+        in_specs=[pl.BlockSpec((width, LANE), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((GROUP, LANE), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((GROUP, W), jnp.int32),
+        interpret=interpret,
+    )(words)
+    return out.reshape(-1)[:k]

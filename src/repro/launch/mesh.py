@@ -19,8 +19,18 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes, axis_types=axis_types)
 
 
-def make_host_mesh(data: int = 1, model: int = 1):
-    """Small mesh over whatever devices exist (tests / CPU examples)."""
+def make_host_mesh(data: int = 1, model: int = 1, pod: int = 1):
+    """Small mesh over whatever devices exist (tests / CPU examples).
+
+    ``pod > 1`` prepends a pod axis — a (pod, data, model) mesh whose
+    dp axes are ("pod", "data"), so the hierarchical ring transport
+    (``--transport ring_hier``) runs its intra-pod/inter-pod schedule
+    end-to-end from the train driver (``--pod-shards``), not just in
+    tests."""
+    if pod > 1:
+        axis_types = (jax.sharding.AxisType.Auto,) * 3
+        return jax.make_mesh((pod, data, model), ("pod", "data", "model"),
+                             axis_types=axis_types)
     axis_types = (jax.sharding.AxisType.Auto,) * 2
     return jax.make_mesh((data, model), ("data", "model"),
                          axis_types=axis_types)

@@ -30,13 +30,17 @@ def parse_args(argv=None):
                             "lgc_rar_q8"])
     p.add_argument("--sparsity", type=float, default=0.001)
     p.add_argument("--transport", default="mesh",
-                   choices=["mesh", "ring", "ring_q8", "ring_hier"],
+                   choices=["mesh", "ring", "ring_q8", "ring_hier",
+                            "ring_packed"],
                    help="communication substrate: lax collectives (mesh), "
                         "the explicit chunked ring with measured wire "
                         "bytes (ring), the int8-wire ring that makes "
                         "lgc_rar_q8's 1-byte/value claim real (ring_q8), "
-                        "or hierarchical intra/inter-pod rings on "
-                        "multi-axis dp meshes (ring_hier)")
+                        "hierarchical intra/inter-pod rings on "
+                        "multi-axis dp meshes (ring_hier), or the packed "
+                        "sparse wire — bit-packed indices + int8 values "
+                        "for the sparse_gd/dgc/lgc_ps top-k exchanges "
+                        "(ring_packed)")
     p.add_argument("--topk-backend", default="jnp",
                    choices=["jnp", "pallas", "fused"],
                    help="residual top-k selection backend (fused = the "
@@ -56,6 +60,11 @@ def parse_args(argv=None):
     p.add_argument("--lr", type=float, default=1e-3)
     p.add_argument("--data-shards", type=int, default=1)
     p.add_argument("--model-shards", type=int, default=1)
+    p.add_argument("--pod-shards", type=int, default=1,
+                   help="prepend a pod axis of this size to the host "
+                        "mesh: dp becomes (pod x data), which is the "
+                        "2-level topology ring_hier's intra/inter-pod "
+                        "schedule is built for")
     p.add_argument("--device-count", type=int, default=0,
                    help="force this many host platform devices")
     p.add_argument("--seed", type=int, default=0)
@@ -68,7 +77,7 @@ def parse_args(argv=None):
 
 def main(argv=None):
     args = parse_args(argv)
-    needed = args.data_shards * args.model_shards
+    needed = args.pod_shards * args.data_shards * args.model_shards
     if args.device_count or needed > 1:
         os.environ.setdefault(
             "XLA_FLAGS",
@@ -104,7 +113,8 @@ def main(argv=None):
                            topk_interpret=not args.topk_compiled)
     tc = TrainConfig(optimizer=args.optimizer, learning_rate=args.lr,
                      steps=args.steps, seed=args.seed, compression=cc)
-    mesh = make_host_mesh(args.data_shards, args.model_shards)
+    mesh = make_host_mesh(args.data_shards, args.model_shards,
+                          pod=args.pod_shards)
     log.info("arch=%s params=%s devices=%d mesh=%s",
              cfg.name, f"{model.param_count():,}", len(jax.devices()),
              dict(zip(mesh.axis_names, mesh.devices.shape)))

@@ -1,0 +1,172 @@
+"""The packed sparse wire, unit level: the bit-plane pack/unpack kernel
+pair (kernels/bitpack.py) and the sparse codec on top of it
+(dist/packed.py).
+
+Acceptance properties (ISSUE 4): pack->unpack is bit-exact for indices
+over unaligned lengths, all-zero segments and every width 1..31; values
+pay exactly one int8 block quantization (the documented q8 bound:
+|err| <= per-block scale / 2); and the packed payload at n=1M lands
+under 0.35x of the raw f32+int32 sparse exchange (the host-side mirror
+of the transports_bench CI gate).
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.dist import packed as PK
+from repro.dist import quantize as Q
+from repro.kernels import bitpack as BP
+
+
+# ---------------------------------------------------------------------------
+# kernel pair: exact roundtrip over widths x unaligned lengths
+
+
+@pytest.mark.parametrize("width", list(range(1, 32)))
+def test_pack_unpack_roundtrip_all_widths(width):
+    rng = np.random.default_rng(width)
+    for k in (1, 31, 32, 33, 127, 129, 4095, 4097):
+        hi = 1 << width
+        x = rng.integers(0, hi, size=(k,), dtype=np.int64).astype(np.int32)
+        words = BP.pack_bits(jnp.asarray(x), width)
+        assert words.shape == (width, BP.word_count(k))
+        assert words.size * 4 == BP.packed_nbytes(k, width)
+        back = np.asarray(BP.unpack_bits(words, k))
+        np.testing.assert_array_equal(back, x)
+
+
+def test_pack_unpack_edge_values():
+    """All-zero segments and the all-ones (max) value survive exactly —
+    including width 31, where the top value bit lands in the int32 sign
+    position of the packed words."""
+    for width in (1, 7, 31):
+        for k in (5, 4096):
+            for fill in (0, (1 << width) - 1):
+                x = np.full((k,), fill, np.int32)
+                back = np.asarray(BP.unpack_bits(
+                    BP.pack_bits(jnp.asarray(x), width), k))
+                np.testing.assert_array_equal(back, x)
+
+
+def test_bit_width_covers_sentinel():
+    """bit_width(n) must represent n ITSELF — the select_topk padding
+    sentinel rides the wire alongside real indices."""
+    assert BP.bit_width(1) == 1
+    assert BP.bit_width(15) == 4
+    assert BP.bit_width(16) == 5          # [0, 16] needs 5 bits
+    assert BP.bit_width((1 << 20) - 1) == 20
+    assert BP.bit_width(1 << 20) == 21
+    for n in (1, 9280, 10**6):
+        assert n < (1 << BP.bit_width(n))
+
+
+def test_word_count_and_nbytes():
+    assert BP.word_count(1) == BP.LANE                  # lane-padded floor
+    assert BP.word_count(32 * 128) == 128
+    assert BP.word_count(32 * 128 + 1) == 256
+    assert BP.packed_nbytes(4096, 12) == 12 * 128 * 4
+
+
+# ---------------------------------------------------------------------------
+# sparse codec: counts + packed low bits + int8 values
+
+
+@pytest.mark.parametrize("n,k", [(9280, 40), (9280, 16), (63, 5),
+                                 (100_000, 1000), (4096, 4096)])
+def test_codec_roundtrip_indices_exact_values_bounded(n, k):
+    rng = np.random.default_rng(n + k)
+    plan = PK.make_plan(n, k, 64)
+    idx = rng.choice(n, size=k, replace=False).astype(np.int32)
+    if k >= 4:
+        idx[-2:] = n                      # mu_pad sentinel padding entries
+    vals = rng.normal(size=k).astype(np.float32)
+    vals[idx == n] = 0.0
+
+    payload = PK.encode_sparse(jnp.asarray(vals), jnp.asarray(idx), plan)
+    dv, di = PK.decode_sparse(payload, plan)
+    order = np.argsort(idx, kind="stable")
+    np.testing.assert_array_equal(np.asarray(di), idx[order])
+    # measured payload == the accounted wire size, array by array
+    assert sum(int(np.asarray(p).nbytes) for p in payload) \
+        == PK.wire_nbytes(plan)
+    # values: exactly one block quantization of the SORTED value vector
+    vs = vals[order]
+    pad = (-k) % 64
+    blocks = np.pad(vs, (0, pad)).reshape(-1, 64)
+    scales = np.abs(blocks).max(1) / 127.0
+    err = np.abs(blocks - np.pad(np.asarray(dv), (0, pad)).reshape(-1, 64))
+    assert (err <= scales[:, None] * 0.5 + 1e-7).all()
+
+
+def test_codec_all_zero_values_and_dense_support():
+    """Degenerate inputs: all-zero values and a fully-dense index set."""
+    n = 512
+    plan = PK.make_plan(n, n, 64)
+    idx = jnp.arange(n, dtype=jnp.int32)
+    vals = jnp.zeros((n,), jnp.float32)
+    dv, di = PK.decode_sparse(PK.encode_sparse(vals, idx, plan), plan)
+    np.testing.assert_array_equal(np.asarray(di), np.arange(n))
+    np.testing.assert_array_equal(np.asarray(dv), np.zeros(n))
+
+
+def test_fake_roundtrip_matches_real_decode_bitwise():
+    """packed.fake_roundtrip is the executable definition of the wire's
+    value error: it must produce IDENTICAL values to a real
+    encode->decode — same sort order, same quantization blocks."""
+    rng = np.random.default_rng(7)
+    n, k = 9280, 464
+    plan = PK.make_plan(n, k, 256)
+    idx = jnp.asarray(rng.choice(n, size=k, replace=False).astype(np.int32))
+    vals = jnp.asarray(rng.normal(size=k).astype(np.float32))
+    dv, di = PK.decode_sparse(PK.encode_sparse(vals, idx, plan), plan)
+    fv, fi = PK.fake_roundtrip(vals, idx, 256)
+    np.testing.assert_array_equal(np.asarray(fi), np.asarray(di))
+    np.testing.assert_array_equal(np.asarray(fv), np.asarray(dv))
+
+
+def test_plan_beats_full_width_and_meets_acceptance_ratio():
+    """make_plan's hi/lo split must never lose to naive full-width
+    packing, and at the acceptance point (n=1M) the whole payload —
+    counts + packed index bits + int8 values + scales — must be
+    <= 0.35x of the f32 values + raw int32 indices it replaces."""
+    for n, k in ((10**6, 4096), (10**6, 8192), (9280, 464)):
+        plan = PK.make_plan(n, k, 256)
+        full = 4 * 1 + BP.packed_nbytes(k, BP.bit_width(n))
+        assert PK.index_nbytes(plan) <= full, (n, k)
+    for k in (4096, 8192):
+        plan = PK.make_plan(10**6, k, 256)
+        assert PK.wire_nbytes(plan) <= 0.35 * k * 8, (k, PK.wire_nbytes(plan))
+
+
+def test_wire_nbytes_is_sum_of_parts():
+    plan = PK.make_plan(10**6, 8192, 256)
+    assert not plan.raw_index
+    assert PK.wire_nbytes(plan) == PK.index_nbytes(plan) \
+        + Q.wire_nbytes(plan.k, plan.scale_block)
+    assert PK.index_nbytes(plan) == 4 * plan.n_buckets \
+        + BP.packed_nbytes(plan.k, plan.lo_bits)
+
+
+def test_small_k_raw_index_fallback():
+    """Below the pack kernels' lane floor the plan ships sorted raw
+    int32 indices instead: the packed wire never pays more than 4
+    bytes/index, and the payload still roundtrips through the same
+    encode/decode (indices exact, values through one quantization)."""
+    rng = np.random.default_rng(3)
+    for n, k in ((10**6, 40), (9280, 16), (1000, 50)):
+        plan = PK.make_plan(n, k, 256)
+        assert plan.raw_index, (n, k)
+        assert PK.index_nbytes(plan) == 4 * k
+        idx = jnp.asarray(rng.choice(n, size=k, replace=False)
+                          .astype(np.int32))
+        vals = jnp.asarray(rng.normal(size=k).astype(np.float32))
+        payload = PK.encode_sparse(vals, idx, plan)
+        assert len(payload) == 3          # idx, q, scales — no planes
+        assert sum(int(np.asarray(p).nbytes) for p in payload) \
+            == PK.wire_nbytes(plan)
+        dv, di = PK.decode_sparse(payload, plan)
+        np.testing.assert_array_equal(np.asarray(di), np.sort(idx))
+        fv, fi = PK.fake_roundtrip(vals, idx, 256)
+        np.testing.assert_array_equal(np.asarray(fv), np.asarray(dv))
+    # large k keeps the genuinely-packed format
+    assert not PK.make_plan(10**6, 8192, 256).raw_index

@@ -14,8 +14,9 @@ from repro.configs.base import CompressionConfig
 from repro.core import build_compressor
 from repro.core import sparsify as SP
 from repro.dist import collectives as C
-from repro.dist.transport import (RingHierTransport, RingQ8Transport,
-                                  SimTransport, make_transport)
+from repro.dist.transport import (RingHierTransport, RingPackedTransport,
+                                  RingQ8Transport, SimTransport,
+                                  make_transport)
 
 PARAMS = {
     "embed": {"w": jnp.zeros((32, 16))},
@@ -42,11 +43,15 @@ def _cc(method, **kw):
 def test_make_transport_kinds():
     t = make_transport("sim", 4)
     assert isinstance(t, SimTransport)
-    for kind in ("mesh", "ring", "ring_q8", "ring_hier"):
+    for kind in ("mesh", "ring", "ring_q8", "ring_hier", "ring_packed"):
         tt = make_transport(kind, 4, axes=("data",))
         assert tt.K == 4
     q8 = make_transport("ring_q8", 4, axes=("data",), scale_block=64)
     assert isinstance(q8, RingQ8Transport) and q8.scale_block == 64
+    pk = make_transport("ring_packed", 4, axes=("data",), scale_block=64,
+                        interpret=False)
+    assert isinstance(pk, RingPackedTransport)
+    assert pk.scale_block == 64 and pk.interpret is False
     hier = make_transport("ring_hier", 4, axes=("pod", "data"),
                           intra_chunk=128, inter_chunk=32)
     assert isinstance(hier, RingHierTransport)
@@ -78,7 +83,8 @@ import jax, jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 from repro.configs.base import CompressionConfig
 from repro.core import build_compressor
-from repro.core.phases import PHASE_COMPRESSED, phase_for_step
+from repro.core.phases import (PHASE_COMPRESSED, PHASE_WARMUP,
+                               phase_for_step)
 from repro.dist import collectives as C
 
 params = {"embed": {"w": jnp.zeros((32, 16))},
@@ -86,13 +92,16 @@ params = {"embed": {"w": jnp.zeros((32, 16))},
           "layer2": {"w": jnp.zeros((64, 64))},
           "lm_head": {"w": jnp.zeros((16, 32))}}
 K = 4
-TRANSPORTS = ("mesh", "ring", "ring_hier", "ring_q8")
+TRANSPORTS = ("mesh", "ring", "ring_hier", "ring_q8", "ring_packed")
 # ring_q8's compressed-phase gradient differs from the fake-quant oracle
 # by the wire's K requantization hops (each <= scale/2, scale ~
 # max|partial z|/127); measured worst case here is ~3e-4 — 2e-3 is the
 # quantization-aware bound with margin.  Everything else is exact to the
 # usual float tolerances (accumulators included: quantization never
-# touches u/v, only the reduced encoding).
+# touches u/v, only the reduced encoding).  ring_packed: indices are
+# bit-exact through the packed wire and values pay ONE quantization
+# (error <= per-block scale/2), so the same quantization-aware bound
+# covers the sparse methods there — float wires stay exact.
 Q8_TOL = 2e-3
 mesh = jax.make_mesh((4,), ("data",),
                      axis_types=(jax.sharding.AxisType.Auto,))
@@ -140,9 +149,11 @@ for method in ["none", "sparse_gd", "dgc", "lgc_rar", "lgc_rar_q8",
             gg, uvs[t], aes[t] = dist_fn(step, phase, t)(uvs[t], aes[t], g)
             outs[t] = gg
         for t in TRANSPORTS:
-            g_tol = Q8_TOL if (t == "ring_q8"
-                               and method == "lgc_rar_q8"
-                               and phase == PHASE_COMPRESSED) else tol
+            quantized = (t == "ring_q8" and method == "lgc_rar_q8"
+                         and phase == PHASE_COMPRESSED) \
+                or (t == "ring_packed" and phase != PHASE_WARMUP
+                    and method in ("sparse_gd", "dgc", "lgc_ps"))
+            g_tol = Q8_TOL if quantized else tol
             err = float(jnp.max(jnp.abs(g_sim - outs[t])))
             assert err < g_tol, (method, t, step, phase, err)
         # state equivalence: per-node accumulators match the sim stack
@@ -353,20 +364,98 @@ print("PASS")
 
 
 def test_sparse_mean_empty_case_preserves_dtype():
-    """Empty-index sparse_mean must return vals.dtype, not hardcoded
-    f32 — bf16 gradients would otherwise hit a dtype mismatch where the
-    result joins the bf16 dense path."""
+    """Empty-index sparse_mean/sparse_mean_packed must return
+    vals.dtype, not hardcoded f32 — bf16 gradients would otherwise hit a
+    dtype mismatch where the result joins the bf16 dense path.  Covers
+    EVERY transport (the PR 3 fix extended beyond SimTransport)."""
     n = 16
     sim = SimTransport(K)
-    mesh = make_transport("mesh", K, axes=("data",))
     for dtype in (jnp.bfloat16, jnp.float32):
         vals = jnp.zeros((K, 0), dtype)
         idx = jnp.zeros((K, 0), jnp.int32)
         assert sim.sparse_mean(vals, idx, n).dtype == dtype
-        # Mesh's empty-case shortcut is per-node shaped (no leading K)
-        assert mesh.sparse_mean(jnp.zeros((0,), dtype),
-                                jnp.zeros((0,), jnp.int32), n).dtype \
-            == dtype
+        assert sim.sparse_mean_packed(vals, idx, n).dtype == dtype
+        assert sim.sparse_gather_packed(vals, idx, n).dtype == dtype
+        for kind in ("mesh", "ring", "ring_q8", "ring_hier",
+                     "ring_packed"):
+            t = make_transport(kind, K, axes=("data",))
+            # the empty-case shortcut is per-node shaped (no leading K)
+            # and never touches the wire, so no mesh is needed
+            for fn in (t.sparse_mean, t.sparse_mean_packed,
+                       t.sparse_gather_packed):
+                assert fn(jnp.zeros((0,), dtype),
+                          jnp.zeros((0,), jnp.int32), n).dtype == dtype
+
+
+def test_sparse_mean_packed_bf16_nonempty_preserves_dtype():
+    """Nonempty bf16 pairs through the float-wire packed path (exact
+    pass-through scatter) must come back bf16 on every transport."""
+    n = 64
+    k = 8
+    idx1 = jnp.arange(k, dtype=jnp.int32) * 7
+    vals_f32 = jnp.linspace(-1.0, 1.0, k, dtype=jnp.float32)
+    sim = SimTransport(K)
+    out = sim.sparse_mean_packed(
+        jnp.tile(vals_f32.astype(jnp.bfloat16), (K, 1)),
+        jnp.tile(idx1, (K, 1)), n)
+    assert out.dtype == jnp.bfloat16 and out.shape == (n,)
+    assert float(jnp.max(jnp.abs(out.astype(jnp.float32)))) > 0
+    for kind in ("mesh", "ring", "ring_q8", "ring_hier", "ring_packed"):
+        t = make_transport(kind, K, axes=())        # axis-free fake path
+        got = t.sparse_mean_packed(vals_f32.astype(jnp.bfloat16), idx1, n)
+        assert got.dtype == jnp.bfloat16, kind
+        g = t.sparse_gather_packed(vals_f32.astype(jnp.bfloat16), idx1, n)
+        assert g.dtype == jnp.bfloat16 and g.shape == (1, n), kind
+
+
+def test_sparse_mean_packed_real_wire_bf16_and_matches_oracle(subproc):
+    """The REAL packed wire on a fake 4-device mesh: bf16/f32 pairs
+    through RingPackedTransport.sparse_mean_packed come back in the
+    input dtype, within the documented q8 bound of the exact Sim oracle
+    (indices bit-exact, values pay ONE block quantization — and DO
+    differ, proving the int8 bytes are real), and the tally records the
+    packed payload, not the raw f32+int32 all_gather."""
+    out = subproc("""
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P
+from repro.dist import collectives as C
+from repro.dist import packed as PK
+from repro.dist.transport import SimTransport, make_transport
+
+K, n, k = 4, 1000, 50
+mesh = jax.make_mesh((K,), ("data",),
+                     axis_types=(jax.sharding.AxisType.Auto,))
+rng = np.random.default_rng(0)
+idx = jnp.asarray(np.stack([rng.choice(n, size=k, replace=False)
+                            for _ in range(K)]).astype(np.int32))
+vals = jnp.asarray(rng.normal(size=(K, k)).astype(np.float32))
+# one quantization per value: |err| <= per-block scale/2 <= max|x|/254
+bound = float(jnp.max(jnp.abs(vals))) / 254.0
+
+for dtype in (jnp.float32, jnp.bfloat16):
+    v = vals.astype(dtype)
+    t = make_transport("ring_packed", K, axes=("data",))
+    def f(vv, ii):
+        return t.sparse_mean_packed(vv[0], ii[0], n)[None]
+    C.reset_wire_tally()
+    g = jax.jit(jax.shard_map(f, mesh=mesh, in_specs=(P("data"), P("data")),
+                              out_specs=P("data"), axis_names={"data"},
+                              check_vma=False))
+    got = g(v, idx)[0]
+    assert got.dtype == dtype, got.dtype
+    oracle = SimTransport(K).sparse_mean_packed(v, idx, n)
+    err = float(jnp.max(jnp.abs(got.astype(jnp.float32)
+                                - oracle.astype(jnp.float32))))
+    # bf16 adds its own rounding on top of the wire quantization
+    tol = bound if dtype == jnp.float32 else bound + 0.01
+    assert 0.0 < err <= tol, (str(dtype), err, tol)
+    wire = C.wire_report()
+    plan = PK.make_plan(n, k, t.scale_block)
+    assert wire == {"all_gather_packed":
+                    (K - 1) * PK.wire_nbytes(plan)}, wire
+print("PASS")
+""", devices=4, timeout=600)
+    assert "PASS" in out
 
 
 # ---------------------------------------------------------------------------

@@ -7,12 +7,14 @@ drift: a collective that starts moving more (or differently-typed)
 payload than the accounting claims fails here immediately.
 
 Documented rate↔wire slack (see ``wire_payload_terms``'s docstring):
-reductions pay the ring factor 2(K-1)/K + chunk padding; all_gather
-exchanges move (K-1)x raw values+indices while the rate prices one
-node's DEFLATE-coded send; the leader index set is a raw int32 broadcast
-vs the rate's deflate/K amortization.  The lgc_rar_q8 encoding term has
-NO slack on the int8 wire: measured and accounted bytes share
-``quantize.wire_nbytes`` and agree by construction.
+reductions pay the ring factor 2(K-1)/K + chunk padding; on the FLOAT
+wires the all_gather exchanges move (K-1)x raw values+indices while the
+rate prices one node's DEFLATE-coded send; the leader index set is a raw
+int32 broadcast vs the rate's deflate/K amortization.  The lgc_rar_q8
+encoding term has NO slack on the int8 wire, and the sparse exchanges
+have NO slack on the packed wire: measured and accounted bytes share
+``quantize.wire_nbytes`` / ``packed.wire_nbytes`` respectively and agree
+by construction.
 """
 import numpy as np
 import jax.numpy as jnp
@@ -22,6 +24,7 @@ from repro.configs.base import CompressionConfig
 from repro.core import autoencoder as AE
 from repro.core import build_compressor
 from repro.core.rate import rate_report, wire_payload_terms
+from repro.dist import packed as PK
 from repro.dist import quantize as Q
 
 K = 4
@@ -55,6 +58,7 @@ from repro.core import build_compressor
 from repro.core.phases import PHASE_COMPRESSED, PHASE_TOPK_AE, PHASE_WARMUP
 from repro.core.rate import wire_payload_terms
 from repro.dist import collectives as C
+from repro.dist import packed as PK
 from repro.dist import quantize as Q
 
 params = {"embed": {"w": jnp.zeros((32, 16))},
@@ -67,7 +71,7 @@ mesh = jax.make_mesh((K,), ("data",),
 
 for method in ["none", "sparse_gd", "dgc", "lgc_rar", "lgc_rar_q8",
                "lgc_ps"]:
-    for transport in ("ring", "ring_q8", "ring_hier"):
+    for transport in ("ring", "ring_q8", "ring_hier", "ring_packed"):
         cc = CompressionConfig(method=method, sparsity=0.05,
                                innovation_sparsity=0.005,
                                warmup_steps=1, ae_train_steps=2,
@@ -120,6 +124,24 @@ for method in ["none", "sparse_gd", "dgc", "lgc_rar", "lgc_rar_q8",
                 # single-axis hierarchical ring records under
                 # "ring_allreduce" too: it IS the plain ring schedule)
                 assert wire["ring_allreduce"] >= 2 * (K - 1) * chunk * 4
+
+        if method in ("sparse_gd", "dgc"):
+            n_tot = comp.layout.n_total
+            if transport == "ring_packed":
+                # the top-k + exempt-last exchanges really move the
+                # packed payload: counts + bit-packed low index bits +
+                # int8 values + per-block scales, (K-1) circulations
+                exp = (K - 1) * (
+                    PK.wire_nbytes(PK.make_plan(n_tot, comp.layout.mu_pad,
+                                                Q.SCALE_BLOCK))
+                    + PK.wire_nbytes(PK.make_plan(n_tot, comp.layout.k_last,
+                                                  Q.SCALE_BLOCK)))
+                assert wire["all_gather_packed"] == exp, (wire, exp)
+                assert "all_gather" not in wire
+            else:
+                # float wire: the same exchanges cost raw f32 + int32
+                assert wire["all_gather"] == (K - 1) * 8 * (
+                    comp.layout.mu_pad + comp.layout.k_last)
 print("PASS")
 """, devices=4, timeout=1800)
     assert "PASS" in out
@@ -190,6 +212,65 @@ print("PASS")
     assert "PASS" in out
 
 
+def test_packed_wire_two_axis_mesh(subproc):
+    """ring_packed on a REAL 2x2 (pod x data) dp mesh: the per-axis
+    packed circulations telescope to exactly (K-1) * payload bytes —
+    the same wire_payload_terms prediction as a single-axis ring — and
+    the global gradient still matches the sim oracle."""
+    out = subproc("""
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P
+from repro.configs.base import CompressionConfig
+from repro.core import build_compressor
+from repro.core.phases import PHASE_TOPK_AE
+from repro.core.rate import wire_payload_terms
+from repro.dist import collectives as C
+
+params = {"embed": {"w": jnp.zeros((32, 16))},
+          "layer1": {"w": jnp.zeros((64, 64)), "b": jnp.zeros((64,))},
+          "lm_head": {"w": jnp.zeros((16, 32))}}
+K = 4
+mesh = jax.make_mesh((2, 2), ("pod", "data"),
+                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+cc = CompressionConfig(method="dgc", sparsity=0.05, warmup_steps=1,
+                       ae_train_steps=2, transport="ring_packed")
+comp = build_compressor(cc, params, K)
+n = comp.layout.n_total
+
+def inner(uv, g):
+    state = {"u": uv["u"][0, 0], "v": uv["v"][0, 0]}
+    gg, ns, _ = comp.dist_step(state, g[0, 0], jnp.asarray(2),
+                               PHASE_TOPK_AE, ("pod", "data"))
+    return gg, {"u": ns["u"][None, None], "v": ns["v"][None, None]}
+
+f = jax.jit(jax.shard_map(
+    inner, mesh=mesh,
+    in_specs=({"u": P("pod", "data"), "v": P("pod", "data")},
+              P("pod", "data")),
+    out_specs=(P(), {"u": P("pod", "data"), "v": P("pod", "data")}),
+    axis_names={"pod", "data"}, check_vma=False))
+
+C.reset_wire_tally()
+uv = {"u": jnp.zeros((2, 2, n)), "v": jnp.zeros((2, 2, n))}
+g = jax.random.normal(jax.random.PRNGKey(1), (2, 2, n)) * 0.01
+gg, _ = f(uv, g)
+wire = C.wire_report()
+expected = wire_payload_terms(cc, comp.layout, K, axis_sizes=(2, 2))
+assert set(wire) == set(expected), (wire, expected)
+for kind in wire:
+    assert np.isclose(wire[kind], expected[kind], rtol=1e-9), (
+        kind, wire[kind], expected[kind])
+
+states = comp.init_sim_states(jax.random.PRNGKey(0))
+g_sim, _, _ = comp.sim_step(states, g.reshape(K, n), 2, PHASE_TOPK_AE)
+err = float(jnp.max(jnp.abs(g_sim - gg)))
+# the packed wire's one value quantization vs the exact sim oracle
+assert err < 1e-3, err
+print("PASS")
+""", devices=4, timeout=1200)
+    assert "PASS" in out
+
+
 # ---------------------------------------------------------------------------
 # host-side: rate_report's transport awareness (the accounting-side fix)
 
@@ -249,6 +330,40 @@ def test_rate_report_transport_override_beats_cc_default():
     r_default = rate_report(cc, layout, K)
     r_q8 = rate_report(cc, layout, K, transport="ring_q8")
     assert r_q8.bytes_per_node < r_default.bytes_per_node
+
+
+def test_rate_report_packed_wire_beats_f32_sparse():
+    """On the packed wire the sparse methods' payload is the REAL packed
+    size — int8 values + bucket counts + bit-packed low index bits —
+    which at 1M params beats the f32-wire payload (f32 values + the
+    DEFLATE index estimate) and matches packed.wire_nbytes exactly."""
+    for method in ("sparse_gd", "dgc"):
+        cc, layout = _big_layout_cc(method, "ring_packed")
+        r_packed = rate_report(cc, layout, K)
+        r_f32 = rate_report(cc, layout, K, transport="ring")
+        assert r_packed.bytes_per_node < r_f32.bytes_per_node, method
+        # component check: total == dense + packed(last) + packed(topk)
+        dense = sum(l.size for l in layout.dense) * 4
+        exp = (dense
+               + PK.wire_nbytes(PK.make_plan(layout.n_total,
+                                             layout.k_last, Q.SCALE_BLOCK))
+               + PK.wire_nbytes(PK.make_plan(layout.n_total,
+                                             layout.mu_pad, Q.SCALE_BLOCK)))
+        assert r_packed.bytes_per_node == exp, method
+    # lgc methods without a packed sparse exchange are transport-neutral
+    cc, layout = _big_layout_cc("lgc_rar", "ring_packed")
+    assert rate_report(cc, layout, K).bytes_per_node == \
+        rate_report(cc, layout, K, transport="ring").bytes_per_node
+
+
+def test_rate_report_packed_innovation_for_lgc_ps():
+    cc, layout = _big_layout_cc("lgc_ps", "ring_packed")
+    r_packed = rate_report(cc, layout, K)
+    r_f32 = rate_report(cc, layout, K, transport="ring")
+    # the innovation + exempt-last payloads shrink; the leader's index
+    # broadcast and z_common stay f32 (they are not sparse exchanges)
+    assert r_packed.bytes_other < r_f32.bytes_other
+    assert r_packed.bytes_leader < r_f32.bytes_leader
 
 
 def test_wire_payload_terms_rejects_unmeasured_transports():
