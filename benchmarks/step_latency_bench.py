@@ -31,6 +31,7 @@ from benchmarks.common import row, time_call
 from repro.configs.base import CompressionConfig
 from repro.core import build_compressor
 from repro.core.phases import phase_for_step
+from repro.core.sparsify import build_layout, fused_plan_info
 
 PARAMS = {
     "embed": {"w": jnp.zeros((128, 64))},
@@ -110,6 +111,11 @@ def main(argv=None):
                   "here; max_err_vs_jnp is exact either way")),
         "methods": {},
     }
+    # the fused sweep's self-describing plan (same derivation the hot
+    # path uses): chosen block size, per-block candidate-pool bound and
+    # the resolved extraction backend — recorded on every fused row so
+    # the perf trajectory says WHAT ran, not just how long it took
+    plan = fused_plan_info(build_layout(PARAMS, 0.02))
     failures = []
     for method in METHODS:
         oracle = run_method(method, "jnp", interpret=interpret)
@@ -129,6 +135,8 @@ def main(argv=None):
                       for a, b in zip(oracle[:3], (gs, u, v)))
             entry[label] = {"us_per_step": round(us, 1),
                             "max_err_vs_jnp": err}
+            if backend == "fused":
+                entry[label].update(plan)
             row(f"step_latency/{method}_{label}", us,
                 f"max_err={err:.1e}")
             if err > TOL:

@@ -1,9 +1,12 @@
 #!/usr/bin/env bash
-# CI smoke gate: pinned deps, tier-1 tests, kernel micro-bench, the
-# step-latency bench (perf trajectory + fused-vs-jnp 1e-5 gate), the
+# CI smoke gate: pinned deps, tier-1 tests, kernel micro-bench (loop vs
+# bitonic extraction rows, exact-gated, written to BENCH_kernels.json),
+# the step-latency bench (perf trajectory + fused-vs-jnp 1e-5 gate), the
 # transport gate (every transport in TRANSPORTS vs the Sim oracle:
-# mesh/ring/ring_hier exact, ring_q8 at the quantization tolerance), and
-# the end-to-end LGC train smoke on 2 fake devices (all transports).
+# mesh/ring/ring_hier exact, ring_q8 at the quantization tolerance), a
+# big-k bitonic fused-sweep gate (k > 16Ki, where the loop extractor is
+# infeasible), and the end-to-end LGC train smoke on 2 fake devices
+# (all transports).
 #
 #   scripts/ci.sh [--no-install]
 set -euo pipefail
@@ -18,8 +21,28 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 echo "=== tier-1 tests ==="
 python -m pytest -x -q
 
-echo "=== kernel micro-benchmarks (correctness-gated) ==="
-python -m benchmarks.kernels_bench
+echo "=== kernel micro-benchmarks (correctness-gated, loop-vs-bitonic extraction rows) ==="
+python -m benchmarks.kernels_bench --out BENCH_kernels.json
+
+echo "=== bitonic big-k gate (auto->bitonic past 8*k_max > FUSED_BLOCK_MAX, bitwise vs jnp) ==="
+python - <<'EOF'
+import jax, jax.numpy as jnp, numpy as np
+from repro.core import sparsify as SP
+
+params = {"embed": {"w": jnp.zeros((16,))},
+          "mid": {"w": jnp.zeros((81920,))},
+          "fc": {"w": jnp.zeros((37,))}}
+layout = SP.build_layout(params, sparsity=0.25)
+info = SP.fused_plan_info(layout)
+assert info["extract_backend"] == "bitonic", info
+v = jax.random.normal(jax.random.PRNGKey(0), (layout.n_total,))
+vj, ij = SP.select_topk(v, layout, backend="jnp")
+vb, ib = SP.select_topk(v, layout, backend="fused", extract="auto")
+assert np.array_equal(np.asarray(ij), np.asarray(ib))
+assert np.array_equal(np.asarray(vj), np.asarray(vb))
+print(f"bitonic big-k gate OK: k_max={max(l.k for l in layout.compressed)}, "
+      f"block={info['fused_block']}")
+EOF
 
 echo "=== step-latency bench (fused/pallas gated vs jnp oracle at 1e-5) ==="
 python -m benchmarks.step_latency_bench --out BENCH_step_latency.json

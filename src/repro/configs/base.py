@@ -200,6 +200,14 @@ class CompressionConfig:
     # compiled (real TPUs); True interprets them (CPU).
     topk_backend: str = "jnp"
     topk_interpret: bool = True
+    # fused sweep's per-block candidate extraction: "loop" (sequential
+    # max->record->mask, O(k) reductions per block — cheapest at small
+    # k), "bitonic" (the lanes-parallel sorting network in
+    # kernels/bitonic.py, O(log^2 block) stages independent of k) or
+    # "auto" (bitonic once k_max crosses the loop's economic threshold
+    # — see core.sparsify.EXTRACT_BACKENDS).  Both are exact and
+    # tie-identical; ignored unless topk_backend="fused".
+    extract_backend: str = "auto"
     # phase-3 encoder backend: "jnp" (conv_general_dilated reference) or
     # "pallas" (ops.lgc_encode_fast — im2col + fused MXU matmul kernel)
     ae_backend: str = "jnp"

@@ -129,12 +129,14 @@ class GradientCompressor:
     def _select(self, v):
         return SP.select_topk(v, self.layout,
                               backend=self.cc.topk_backend,
-                              interpret=self.cc.topk_interpret)
+                              interpret=self.cc.topk_interpret,
+                              extract=self.cc.extract_backend)
 
     def _select_last(self, v):
         return SP.select_topk_last(v, self.layout,
                                    backend=self.cc.topk_backend,
-                                   interpret=self.cc.topk_interpret)
+                                   interpret=self.cc.topk_interpret,
+                                   extract=self.cc.extract_backend)
 
     def _fused_sweep(self, u, v, g):
         """One-launch accumulate + select over compressed AND exempt-last
@@ -142,7 +144,8 @@ class GradientCompressor:
         return SP.fused_accumulate_select(
             g, u, v, self.layout, self.cc.momentum_correction,
             use_momentum=self._use_momentum,
-            interpret=self.cc.topk_interpret)
+            interpret=self.cc.topk_interpret,
+            extract=self.cc.extract_backend)
 
     def _encode(self, ae, x):
         assert self.cc.ae_backend in ("jnp", "pallas"), self.cc.ae_backend
@@ -263,7 +266,13 @@ class GradientCompressor:
 
         leader = step % self.K
         own_idx = f_idx if fused else t.pernode(self._select)(v)[1]
-        idx = t.from_leader(own_idx, leader)                 # global (mu_pad,)
+        # canonical (sorted) support on EVERY transport: the packed index
+        # broadcast's histogram codec requires monotone indices, and the
+        # support must be ordered identically everywhere for the
+        # transport-equivalence gates to stay bitwise (a set in a
+        # different order would reorder the AE's input vector)
+        own_idx = jnp.sort(own_idx, axis=-1)
+        idx = t.broadcast_packed(own_idx, leader, n)         # global (mu_pad,)
         vals = t.pernode(SP.gather_at, in_axes=(0, None))(v, idx)  # per-node
 
         is_ps = cc.method == "lgc_ps"

@@ -92,8 +92,11 @@ def rate_report(cc: CompressionConfig, layout: GradientLayout, K: int,
     and innovation exchanges cost their real packed size — int8 values
     + bucket counts + bit-packed low index bits — on the packed wire
     ("ring_packed"), and f32 values + DEFLATE-estimated indices
-    elsewhere.  Fake quantization saves nothing on the wire, and this
-    report no longer pretends it does."""
+    elsewhere.  The lgc family's leader index set likewise costs its
+    real packed-index size on "ring_packed" (bit-exact — bytes change,
+    numerics don't) and the deflate estimate elsewhere.  Fake
+    quantization saves nothing on the wire, and this report no longer
+    pretends it does."""
     n = layout.n_total
     baseline = n * BYTES_F32
     tkind = transport if transport is not None else cc.transport
@@ -131,6 +134,14 @@ def rate_report(cc: CompressionConfig, layout: GradientLayout, K: int,
         return RateReport(cc.method, b, b, b, baseline, cr, cr, cr)
 
     mu_pad = layout.mu_pad
+    if tkind == "ring_packed":
+        # the lgc leader index set rides the packed index wire on this
+        # transport (transport.broadcast_packed): mu_pad sorted indices
+        # — sentinel padding included — as bucket counts + bit-packed
+        # low bits, which REPLACES the deflate estimate with the
+        # structural size of the bytes actually shipped (bit-exact
+        # decode, so this term is the only thing that changes)
+        idx_bytes = PK.index_nbytes(PK.make_plan(n, mu_pad, sb))
     z_floats = AE.compressed_length(mu_pad)
     if cc.method == "lgc_rar_q8" and tkind == "ring_q8":
         z_payload = Q.wire_nbytes(z_floats,
@@ -210,7 +221,10 @@ def wire_payload_terms(cc: CompressionConfig, layout: GradientLayout,
         construction — the rate's entropy-coded index claim made
         structural;
       * the leader index set ships as a raw int32 broadcast at
-        (K-1)/K·nbytes, vs the rate's deflate(idx)/K amortization;
+        (K-1)/K·nbytes, vs the rate's deflate(idx)/K amortization — on
+        the packed wire this slack too is CLOSED: both sides price the
+        identical ``packed.index_nbytes`` payload (the broadcast moves
+        (K-1)/K of it, the rate amortizes the same bytes over K);
       * the ``lgc_rar_q8`` encoding term uses the same
         ``quantize.wire_nbytes`` (1 byte/value + one f32 scale per
         block) as ``rate_report(transport="ring_q8")`` — on the int8
@@ -284,8 +298,15 @@ def wire_payload_terms(cc: CompressionConfig, layout: GradientLayout,
         sparse_exchange(layout.n_total, mp)
         return terms
 
-    # lgc family: the rotating leader's index set is a raw i32 broadcast
-    add("broadcast", (K - 1) / K * mp * BYTES_I32)
+    # lgc family: the rotating leader's index set — a raw i32 broadcast
+    # on the float wires, the packed index payload (bucket counts +
+    # bit-packed low bits, bit-exact) on ring_packed for EVERY lgc
+    # method (the index wire carries no values, so it is method-blind)
+    if tkind == "ring_packed":
+        add("broadcast_packed", (K - 1) / K
+            * PK.index_nbytes(PK.make_plan(layout.n_total, mp, sb)))
+    else:
+        add("broadcast", (K - 1) / K * mp * BYTES_I32)
     zl = AE.compressed_length(mp)
     if cc.method == "lgc_ps":
         add("broadcast", (K - 1) / K * zl * BYTES_F32)   # z_common

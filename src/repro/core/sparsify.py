@@ -32,6 +32,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels.bitonic import next_pow2
 from repro.kernels.segmented_topk import BLOCK as _SEG_BLOCK
 from repro.utils.tree import keystr_path
 
@@ -172,31 +173,58 @@ FUSED_BLOCK = _SEG_BLOCK
 # compiled (interpret=False)
 FUSED_BLOCK_MAX = 128 * 1024
 
+# per-block candidate-extraction backends (kernels/segmented_topk vs
+# kernels/bitonic — bit-identical output, different cost shape).  "auto"
+# picks loop at small k (fewer total ops) and bitonic once the loop's
+# 8*k_max block rule would blow past FUSED_BLOCK_MAX, i.e. the regime
+# where the loop degrades toward O(block) serial reductions per block.
+EXTRACT_BACKENDS = ("auto", "loop", "bitonic")
 
-def _fused_block(slots) -> int:
+
+def _resolve_extract(extract: str, slots) -> str:
+    assert extract in EXTRACT_BACKENDS, extract
+    if extract != "auto":
+        return extract
+    k_max = max((l.k for l in slots), default=1)
+    return "bitonic" if 8 * k_max > FUSED_BLOCK_MAX else "loop"
+
+
+def _fused_block(slots, extract: str = "loop") -> int:
     """Per-layout sweep block size.  Exact block-local selection must keep
     min(k, block) candidates per block (pigeonhole), so with the default
     tile a leaf with k >= 1024 would make EVERY element a candidate.
-    Scaling the block to >= 8*k_max keeps the candidate pool <= ~n/8 and
-    the per-block extraction loop <= ~block/8 iterations — the same
-    k-iterations-per-block shape as block_topk/global_topk.  Capped at
-    FUSED_BLOCK_MAX to bound VMEM; past that k the pool bound degrades
-    gracefully (correctness is unaffected — n_cand stays exact)."""
+
+    loop: per-block extraction costs n_cand (~k) sequential global
+    reductions, so the block scales to >= 8*k_max — candidate pool
+    <= ~n/8 and the extraction loop <= ~block/8 iterations — capped at
+    FUSED_BLOCK_MAX to bound VMEM; past that cap the pool bound degrades
+    (correctness is unaffected — n_cand stays exact).
+
+    bitonic: extraction is O(log² block) stages independent of k, so the
+    block is chosen on VMEM alone — the smallest power of two covering
+    k_max (keeping the pool <= ~n/block · k ≈ k per block), up to the
+    same VMEM ceiling.  Power-of-two blocks also make the sorting
+    network padding-free."""
     k_max = max((l.k for l in slots), default=1)
+    if extract == "bitonic":
+        return min(FUSED_BLOCK_MAX, next_pow2(max(FUSED_BLOCK, k_max)))
     want = -(-8 * k_max // FUSED_BLOCK) * FUSED_BLOCK
     return max(FUSED_BLOCK, min(FUSED_BLOCK_MAX, want))
 
 
 @functools.lru_cache(maxsize=64)
-def _fused_meta(layout: GradientLayout, roles: Tuple[str, ...]):
-    """Static segmented-sweep metadata for ``layout``: the block size,
-    the element->slot map (numpy, becomes a trace-time constant),
-    per-slot top-k caps, and the exact per-block candidate budget (worst
-    case over blocks of sum_slots min(k_slot, |slot piece in block|) —
-    the pigeonhole bound that makes the merged result exact)."""
+def _fused_meta(layout: GradientLayout, roles: Tuple[str, ...],
+                extract: str = "auto"):
+    """Static segmented-sweep metadata for ``layout``: the resolved
+    extraction backend, the block size, the element->slot map (numpy,
+    becomes a trace-time constant), per-slot top-k caps, and the exact
+    per-block candidate budget (worst case over blocks of sum_slots
+    min(k_slot, |slot piece in block|) — the pigeonhole bound that makes
+    the merged result exact)."""
     slots = tuple(l for role in roles for l in layout.leaves
                   if l.role == role)
-    block = _fused_block(slots)
+    ex = _resolve_extract(extract, slots)
+    block = _fused_block(slots, ex)
     n_pad = -(-layout.n_total // block) * block
     seg = np.full((n_pad,), -1, np.int32)
     for j, leaf in enumerate(slots):
@@ -214,7 +242,18 @@ def _fused_meta(layout: GradientLayout, roles: Tuple[str, ...]):
                   - np.maximum(leaf.offset, bs * block))
         budget[b0:b1 + 1] += np.minimum(pieces, leaf.k)
     n_cand = max(1, int(budget.max(initial=0)))
-    return block, seg[:layout.n_total], kcap, n_cand, slots
+    return ex, block, seg[:layout.n_total], kcap, n_cand, slots
+
+
+def fused_plan_info(layout: GradientLayout,
+                    roles: Tuple[str, ...] = (ROLE_COMPRESSED,
+                                              ROLE_TOPK_ONLY),
+                    extract: str = "auto") -> dict:
+    """Self-describing sweep plan for bench artifacts: the chosen block
+    size, per-block candidate-pool bound, and resolved extraction
+    backend for ``layout`` (same derivation the hot path uses)."""
+    ex, block, _, _, n_cand, _ = _fused_meta(layout, roles, extract)
+    return {"fused_block": block, "n_cand": n_cand, "extract_backend": ex}
 
 
 def _merge_candidates(cvals, cidx, cseg, slots):
@@ -233,16 +272,19 @@ def _merge_candidates(cvals, cidx, cseg, slots):
 
 
 def _fused_select_lists(v: jnp.ndarray, layout: GradientLayout,
-                        roles: Tuple[str, ...], interpret: bool):
+                        roles: Tuple[str, ...], interpret: bool,
+                        extract: str = "auto"):
     """Per-leaf (vals, idx) lists for all leaves of ``roles`` via ONE
     segmented-sweep kernel launch."""
     from repro.kernels import ops as K_ops
-    block, seg, kcap, n_cand, slots = _fused_meta(layout, roles)
+    ex, block, seg, kcap, n_cand, slots = _fused_meta(layout, roles,
+                                                      extract)
     if not slots:
         return [], []
     cv, ci, cs = K_ops.segmented_topk(v, jnp.asarray(seg),
                                       jnp.asarray(kcap), n_cand=n_cand,
-                                      block=block, interpret=interpret)
+                                      block=block, extract=ex,
+                                      interpret=interpret)
     return _merge_candidates(cv, ci, cs, slots)
 
 
@@ -272,15 +314,18 @@ def _pad_compressed(vals_list, idx_list, layout, dtype):
 
 
 def select_topk(v: jnp.ndarray, layout: GradientLayout,
-                backend: str = "jnp", interpret: bool = True):
+                backend: str = "jnp", interpret: bool = True,
+                extract: str = "auto"):
     """Top-k per compressed leaf of the residual vector ``v``.
 
     ``backend`` picks the selection implementation: "jnp" (lax.top_k
     reference), "pallas" (the block-local top-k kernel, one launch per
     leaf) or "fused" (the segmented sweep in kernels/segmented_topk.py,
     ONE launch for the whole vector).  All are exact and return the same
-    ordering (ties break lowest-index-first).  Pass ``interpret=False``
-    on real TPUs.
+    ordering (ties break lowest-index-first).  ``extract`` picks the
+    fused sweep's per-block extraction ("auto" | "loop" | "bitonic" —
+    see EXTRACT_BACKENDS; ignored by the other backends).  Pass
+    ``interpret=False`` on real TPUs.
 
     Returns (values (mu_pad,), indices (mu_pad,) int32).  Padding entries
     carry value 0 and sentinel index n_total (dropped by scatters).
@@ -288,7 +333,7 @@ def select_topk(v: jnp.ndarray, layout: GradientLayout,
     assert backend in SELECT_BACKENDS, backend
     if backend == "fused":
         vals_list, idx_list = _fused_select_lists(
-            v, layout, (ROLE_COMPRESSED,), interpret)
+            v, layout, (ROLE_COMPRESSED,), interpret, extract)
     else:
         vals_list, idx_list = _per_leaf_select(v, layout.compressed,
                                                backend, interpret)
@@ -296,7 +341,8 @@ def select_topk(v: jnp.ndarray, layout: GradientLayout,
 
 
 def select_topk_last(v: jnp.ndarray, layout: GradientLayout,
-                     backend: str = "jnp", interpret: bool = True):
+                     backend: str = "jnp", interpret: bool = True,
+                     extract: str = "auto"):
     """Top-k over the exempt last layer(s) (sent raw, no AE), through the
     same backend dispatch as :func:`select_topk`."""
     assert backend in SELECT_BACKENDS, backend
@@ -304,7 +350,7 @@ def select_topk_last(v: jnp.ndarray, layout: GradientLayout,
         return (jnp.zeros((0,), v.dtype), jnp.zeros((0,), jnp.int32))
     if backend == "fused":
         vals_list, idx_list = _fused_select_lists(
-            v, layout, (ROLE_TOPK_ONLY,), interpret)
+            v, layout, (ROLE_TOPK_ONLY,), interpret, extract)
     else:
         vals_list, idx_list = _per_leaf_select(v, layout.topk_only,
                                                backend, interpret)
@@ -315,7 +361,8 @@ def select_topk_last(v: jnp.ndarray, layout: GradientLayout,
 def fused_accumulate_select(g: jnp.ndarray, u: jnp.ndarray, v: jnp.ndarray,
                             layout: GradientLayout, momentum: float,
                             use_momentum: bool = True,
-                            interpret: bool = True):
+                            interpret: bool = True,
+                            extract: str = "auto"):
     """THE fused hot path (``topk_backend="fused"``): one kernel sweep
     does the EF accumulate (u' = m*u + g, v' = v + u'; plain residual
     accumulation when ``use_momentum=False``) AND the segmented top-k
@@ -327,7 +374,8 @@ def fused_accumulate_select(g: jnp.ndarray, u: jnp.ndarray, v: jnp.ndarray,
     launch per leaf, in one read of (g, u, v) and one write of (u', v').
     """
     roles = (ROLE_COMPRESSED, ROLE_TOPK_ONLY)
-    block, seg, kcap, n_cand, slots = _fused_meta(layout, roles)
+    ex, block, seg, kcap, n_cand, slots = _fused_meta(layout, roles,
+                                                      extract)
     if not slots:                        # degenerate: nothing selectable
         # (no compressed and no topk_only leaves => mu_pad == k_last == 0)
         if use_momentum:
@@ -339,7 +387,8 @@ def fused_accumulate_select(g: jnp.ndarray, u: jnp.ndarray, v: jnp.ndarray,
     from repro.kernels import ops as K_ops
     u2, v2, cv, ci, cs = K_ops.fused_ef_topk(
         g, u, v, jnp.asarray(seg), jnp.asarray(kcap), momentum,
-        bool(use_momentum), n_cand, block=block, interpret=interpret)
+        bool(use_momentum), n_cand, block=block, extract=ex,
+        interpret=interpret)
     vals_list, idx_list = _merge_candidates(cv, ci, cs, slots)
     nc = len(layout.compressed)
     vals, idx = _pad_compressed(vals_list[:nc], idx_list[:nc], layout,

@@ -29,6 +29,10 @@ The ring family (all recorded at their real payload sizes):
   broadcast / ring_broadcast  accounted one-to-all at (K-1)/K·nbytes —
                             the leader's index-set exchange is a
                             broadcast, NOT a 2(K-1)/K allreduce
+  ring_broadcast_packed     the same one-to-all forwarding for a packed
+                            multi-array payload (the leader index set as
+                            bucket counts + bit-packed low-bit words),
+                            accounted at (K-1)/K of the packed bytes
 
 Accounting semantics: shapes are static, so byte counts are recorded at
 *trace* time into a module-level tally.  Each jit specialization records
@@ -423,3 +427,32 @@ def ring_broadcast(x, axes: AxisName, is_leader) -> jnp.ndarray:
             buf = jnp.where(take, recv, buf)
             have = jnp.maximum(have, recv_have)
     return buf
+
+
+def ring_broadcast_packed(payload: Sequence[jnp.ndarray], axes: AxisName,
+                          is_leader, kind: str = "broadcast_packed"):
+    """:func:`ring_broadcast` of a multi-array *packed* payload: the
+    leader's tuple of arrays (index bucket counts + bit-packed low-bit
+    words, or the raw-fallback indices) reaches every node over the same
+    adopt-first-arrival ``ppermute`` forwarding, all arrays moving
+    together so a node adopts a *consistent* payload.  The tally records
+    the packed bytes at broadcast cost — (K-1)/K · Σ nbytes per node —
+    under ``kind``: the collective that makes the leader index set's
+    ceil(log2 n)-bit accounting real (vs :func:`ring_broadcast`'s raw
+    int32)."""
+    axes_t = _axes_tuple(axes)
+    K_total = jax.lax.axis_size(axes_t)
+    record_wire_bytes(kind, (K_total - 1) / max(K_total, 1)
+                      * sum(_nbytes(p) for p in payload))
+    bufs = [jnp.where(is_leader, p, jnp.zeros_like(p)) for p in payload]
+    have = jnp.asarray(is_leader).astype(jnp.int32)
+    for ax in axes_t:
+        K = jax.lax.axis_size(ax)
+        fwd = _ring_fwd(K)
+        for _ in range(K - 1):
+            recvs = [jax.lax.ppermute(b, ax, fwd) for b in bufs]
+            recv_have = jax.lax.ppermute(have, ax, fwd)
+            take = (recv_have > 0) & (have == 0)
+            bufs = [jnp.where(take, r, b) for r, b in zip(recvs, bufs)]
+            have = jnp.maximum(have, recv_have)
+    return tuple(bufs)

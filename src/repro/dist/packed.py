@@ -119,6 +119,41 @@ def _sort_pairs(vals: jnp.ndarray, idx: jnp.ndarray):
     return jnp.take(vals, order), jnp.take(idx, order).astype(jnp.int32)
 
 
+def encode_indices(idx: jnp.ndarray, plan: PackPlan,
+                   interpret: bool = True) -> Tuple[jnp.ndarray, ...]:
+    """The index half of the wire on its own: *sorted-ascending* int32
+    ``idx`` (plan.k,) -> (counts, words), or (idx,) on the small-k
+    raw-index fallback.  The histogram expansion in
+    :func:`decode_indices` repeats bucket ids in order, so monotone
+    input is a hard precondition (the pair codec sorts for you;
+    index-only callers — the leader-support broadcast — must ship a
+    canonical sorted set anyway).  Indices roundtrip bit-exact for any
+    sorted values in [0, n], the ``select_topk`` sentinel ``n``
+    included."""
+    assert idx.shape == (plan.k,), (idx.shape, plan)
+    idx = idx.astype(jnp.int32)
+    if plan.raw_index:
+        return (idx,)
+    hi = idx >> plan.lo_bits
+    counts = jnp.zeros((plan.n_buckets,), jnp.int32).at[hi].add(1)
+    words = BP.pack_bits(idx & ((1 << plan.lo_bits) - 1), plan.lo_bits,
+                         interpret=interpret)
+    return counts, words
+
+
+def decode_indices(payload, plan: PackPlan,
+                   interpret: bool = True) -> jnp.ndarray:
+    """Inverse of :func:`encode_indices` -> sorted int32 (plan.k,)."""
+    if plan.raw_index:
+        (idx,) = payload
+        return idx
+    counts, words = payload
+    lo = BP.unpack_bits(words, plan.k, interpret=interpret)
+    hi = jnp.repeat(jnp.arange(plan.n_buckets, dtype=jnp.int32),
+                    counts, total_repeat_length=plan.k)
+    return (hi << plan.lo_bits) | lo
+
+
 def encode_sparse(vals: jnp.ndarray, idx: jnp.ndarray, plan: PackPlan,
                   interpret: bool = True):
     """-> the real wire payload: (counts, words, q, scales), or
@@ -126,27 +161,15 @@ def encode_sparse(vals: jnp.ndarray, idx: jnp.ndarray, plan: PackPlan,
     assert vals.shape == idx.shape == (plan.k,), (vals.shape, plan)
     vals_s, idx_s = _sort_pairs(vals, idx)
     q, scales = Q.quantize_i8(vals_s, plan.scale_block)
-    if plan.raw_index:
-        return idx_s, q, scales
-    hi = idx_s >> plan.lo_bits
-    counts = jnp.zeros((plan.n_buckets,), jnp.int32).at[hi].add(1)
-    words = BP.pack_bits(idx_s & ((1 << plan.lo_bits) - 1), plan.lo_bits,
-                         interpret=interpret)
-    return counts, words, q, scales
+    return encode_indices(idx_s, plan, interpret=interpret) + (q, scales)
 
 
 def decode_sparse(payload, plan: PackPlan, interpret: bool = True
                   ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Inverse of :func:`encode_sparse` -> (vals f32 (k,), idx int32
     (k,)) in index-sorted order: indices bit-exact, values dequantized."""
-    if plan.raw_index:
-        idx, q, scales = payload
-    else:
-        counts, words, q, scales = payload
-        lo = BP.unpack_bits(words, plan.k, interpret=interpret)
-        hi = jnp.repeat(jnp.arange(plan.n_buckets, dtype=jnp.int32),
-                        counts, total_repeat_length=plan.k)
-        idx = (hi << plan.lo_bits) | lo
+    q, scales = payload[-2], payload[-1]
+    idx = decode_indices(payload[:-2], plan, interpret=interpret)
     return Q.dequantize_i8(q, scales, plan.k), idx
 
 

@@ -1,0 +1,189 @@
+"""Bitonic per-block partial sort for the fused segmented sweep.
+
+``segmented_topk.select_candidates`` extracts a block's per-segment
+top-k candidates with a sequential (max -> record -> mask) loop: one
+global VPU reduction per candidate slot, so per-block work grows with
+``n_cand`` (~k).  Past ``FUSED_BLOCK_MAX`` (k_max > 16Ki, i.e. leaves
+>= ~16M params at the paper's alpha=0.1%) that loop approaches O(block)
+serial reductions and the sweep loses its speed advantage — DESIGN.md's
+"Scaling note".  This module is the named fix: a lanes-parallel bitonic
+sorting network whose sequential depth is O(log^2 block) compare-
+exchange stages *independent of k*.
+
+``select_candidates_bitonic`` is a drop-in for the loop (same signature,
+same outputs, bit-identical — property-tested in tests/test_bitonic.py):
+
+  1. sort the whole block descending by (|value|, index asc) — the
+     lexicographic key that reproduces ``lax.top_k``'s stable
+     lowest-index-first tie-break exactly; masked elements (seg < 0,
+     power-of-two padding) carry magnitude −1 and sink to the back;
+  2. cap pass: in sorted order an element is kept iff its rank *within
+     its segment* is below the segment's cap — per-slot prefix counts
+     (one cumsum per slot) replace the loop's k sequential global maxes,
+     and straddling-leaf caps fall out of the per-slot ranks;
+  3. compact the kept elements to the front with a second bitonic sort
+     on the dense destination key (exclusive prefix sum over the keep
+     mask; dropped elements get unique keys >= n2 and sink), then slice
+     the first ``n_cand`` slots and overwrite the dead tail with the
+     loop's (0, block, −1) fill.
+
+The kept set equals the loop's by construction (the loop masks a
+segment once its cap count is reached — exactly the rank >= cap
+elements), and the emission order (magnitude-descending, ties by index)
+is the loop's too, so the candidate triples — and therefore the merged
+per-leaf result — are *identical*, not just equivalent.
+
+Everything is elementwise/reshape/where on block-length vectors (the
+compare-exchange pairs are a ``(n2/2j, 2j)`` reshape, direction bits an
+iota mask), so each stage is one VPU-parallel pass; ``jnp.cumsum`` is a
+log-depth scan.  Runs inside the same Pallas kernels as the loop
+backend (``extract="bitonic"`` on the sweep entry points) — the
+one-launch/one-HBM-pass structure of the sweep is untouched.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def next_pow2(n: int) -> int:
+    """Smallest power of two >= n (the network's operand length)."""
+    return 1 if n <= 1 else 1 << (int(n) - 1).bit_length()
+
+
+def _iota(n: int) -> jnp.ndarray:
+    # TPU requires >= 2D iota; broadcast then collapse (pallas guide)
+    return jax.lax.broadcasted_iota(jnp.int32, (n, 1), 0).reshape(n)
+
+
+def _stages(n2: int):
+    """The bitonic network's (kk, j) stage schedule: log2(n2) merge
+    levels of 1..log2(kk) compare-exchange distances — depth
+    log2(n2)·(log2(n2)+1)/2 stages total."""
+    kk = 2
+    while kk <= n2:
+        j = kk // 2
+        while j >= 1:
+            yield kk, j
+            j //= 2
+        kk *= 2
+
+
+def bitonic_sort(arrs, lt, n_keys: int, n2: int):
+    """Sort ``arrs`` (same-length power-of-two vectors) ascending by the
+    strict order ``lt`` over the first ``n_keys`` arrays, carrying the
+    rest as payload.  ``lt(a_keys, b_keys)`` gets tuples of split key
+    arrays and must be a strict total order (equal keys never swap, so
+    fully-tied elements keep a consistent relative order).
+
+    Each stage pairs elements at distance j via a (n2/2j, 2j) reshape
+    (columns [:j] vs [j:]), derives the per-pair sort direction from the
+    position's kk bit, and compare-exchanges all pairs in one
+    elementwise pass — no gathers, no sequential reductions.
+    """
+    pos = _iota(n2)
+    for kk, j in _stages(n2):
+        def split(a):
+            a2 = a.reshape(n2 // (2 * j), 2 * j)
+            return a2[:, :j], a2[:, j:]
+        los, his = zip(*(split(a) for a in arrs))
+        lo_pos, _ = split(pos)
+        dirn = (lo_pos & kk) != 0            # this subsequence descends
+        swap = jnp.where(dirn, lt(los[:n_keys], his[:n_keys]),
+                         lt(his[:n_keys], los[:n_keys]))
+        out = []
+        for lo, hi in zip(los, his):
+            out.append(jnp.concatenate(
+                [jnp.where(swap, hi, lo), jnp.where(swap, lo, hi)],
+                axis=1).reshape(n2))
+        arrs = out
+    return arrs
+
+
+def _extract(xf, segf, kcap, n_cand: int, block: int):
+    """The sort-network body of :func:`select_candidates_bitonic` on
+    flattened (block,) value / segment-id vectors."""
+    flat_idx = _iota(block)
+    mag = jnp.where(segf >= 0, jnp.abs(xf), -1.0)
+    n2 = next_pow2(block)
+    if n2 != block:                          # non-power-of-two blocks
+        p = n2 - block
+        mag = jnp.concatenate([mag, jnp.full((p,), -1.0, mag.dtype)])
+        xf = jnp.concatenate([xf, jnp.zeros((p,), xf.dtype)])
+        segf = jnp.concatenate([segf, jnp.full((p,), -1, jnp.int32)])
+        flat_idx = jnp.concatenate([flat_idx, block + _iota(p)])
+
+    def lt_desc(a, b):                       # strictly-before: mag desc,
+        return (a[0] > b[0]) | ((a[0] == b[0]) & (a[1] < b[1]))  # idx asc
+
+    mag, flat_idx, xf, segf = bitonic_sort(
+        [mag, flat_idx, xf, segf], lt_desc, 2, n2)
+
+    # cap pass: rank-in-segment over the sorted order.  One cumsum per
+    # slot (n_slots is the static leaf count) — an element is kept iff
+    # it is selectable and among its segment's first cap elements, which
+    # is exactly the set the loop backend's cap-out masking keeps.
+    n_slots = kcap.shape[-1]
+    rank = jnp.zeros((n2,), jnp.int32)
+    cap = jnp.zeros((n2,), jnp.int32)
+    for s in range(n_slots):
+        is_s = segf == s
+        ones = is_s.astype(jnp.int32)
+        rank = rank + jnp.where(is_s, jnp.cumsum(ones) - 1, 0)
+        cap = cap + jnp.where(is_s, kcap[0, s], 0)
+    keep = (mag >= 0.0) & (rank < cap)
+
+    # compaction: kept elements move to their dense destination (the
+    # exclusive prefix over the keep mask preserves the sorted order);
+    # dropped elements get unique keys >= n2 and sink past n_cand
+    keep_i = keep.astype(jnp.int32)
+    csum = jnp.cumsum(keep_i)
+    total = csum[-1]                         # kept count, <= n_cand
+    key = jnp.where(keep, csum - keep_i, n2 + _iota(n2))
+
+    def lt_asc(a, b):
+        return a[0] < b[0]
+
+    key, xf, flat_idx, segf = bitonic_sort(
+        [key, xf, flat_idx, segf], lt_asc, 1, n2)
+    live = _iota(n_cand) < total
+    vals = jnp.where(live, xf[:n_cand], 0.0)
+    idxs = jnp.where(live, flat_idx[:n_cand], block)
+    segs = jnp.where(live, segf[:n_cand], -1)
+    return vals, idxs, segs
+
+
+def select_candidates_bitonic(x, seg, kcap, n_cand: int, block: int):
+    """Bitonic drop-in for ``segmented_topk.select_candidates`` (same
+    contract: x, seg are (block//LANE, LANE) VMEM tiles, kcap is
+    (1, n_slots); returns (vals, idx block-local, seg) each (n_cand,)
+    with unused slots = (0, block, −1)).  Bit-identical to the loop
+    extractor on materialized inputs; the sequential depth is
+    2·O(log² block) stages + one cumsum per slot, independent of the
+    candidate count.
+
+    The network runs inside a trip-count-1 fori_loop on purpose: when x
+    is a value computed in the surrounding kernel (the fused EF sweep's
+    v'), XLA may rematerialize that expression per consumer with
+    different fma contraction (an optimization_barrier does not survive
+    pallas lowering).  The loop's carried operands are materialized
+    buffers the sort fusions cannot recompute into, so every stage —
+    magnitudes, carried values, tie-breaks — sees ONE consistent copy
+    of x.  Which fma variant that copy is remains XLA's choice, so in
+    the fused-accumulate kernel candidate *values* may sit 1 ulp off
+    the stored residual — the same slack the per-backend equivalence
+    gates already grant the loop extractor (vals atol 1e-6, indices
+    exact).
+    """
+    xf = x.reshape(block)
+    segf = seg.reshape(block)
+
+    def body(_, carry):
+        xc, sc, _, _, _ = carry
+        return (xc, sc) + _extract(xc, sc, kcap, n_cand, block)
+
+    init = (xf, segf, jnp.zeros((n_cand,), x.dtype),
+            jnp.full((n_cand,), block, jnp.int32),
+            jnp.full((n_cand,), -1, jnp.int32))
+    _, _, vals, idxs, segs = jax.lax.fori_loop(0, 1, body, init)
+    return vals, idxs, segs

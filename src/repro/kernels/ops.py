@@ -96,33 +96,37 @@ def global_topk(x: jnp.ndarray, k: int, block: int = 64 * 128,
 # segmented sweep: whole-vector per-leaf selection in ONE launch
 
 
-@functools.partial(jax.jit, static_argnames=("n_cand", "block", "interpret"))
+@functools.partial(jax.jit, static_argnames=("n_cand", "block", "extract",
+                                             "interpret"))
 def segmented_topk(x: jnp.ndarray, seg: jnp.ndarray, kcap: jnp.ndarray,
                    n_cand: int, block: int = SEG_BLOCK,
-                   interpret: bool = True):
+                   extract: str = "loop", interpret: bool = True):
     """Candidate sweep over an arbitrary-length flat vector (auto-padded).
 
     ``seg`` maps each element to a selection slot (-1 = not selectable),
     ``kcap`` gives each slot's top-k cap, ``n_cand`` the per-block
-    candidate budget (see sparsify's layout metadata).  Returns flattened
-    (vals, idx, slot) candidate triples with idx in element coordinates
-    of ``x``; the exact per-slot top-k is a tiny lax.top_k merge over
-    these (core/sparsify._merge_candidates).
+    candidate budget (see sparsify's layout metadata).  ``extract``
+    picks the per-block backend ("loop" | "bitonic" — bit-identical,
+    see kernels/bitonic.py).  Returns flattened (vals, idx, slot)
+    candidate triples with idx in element coordinates of ``x``; the
+    exact per-slot top-k is a tiny lax.top_k merge over these
+    (core/sparsify._merge_candidates).
     """
     xp, _ = _pad_to(x, block)
     segp, _ = _pad_to(seg, block, value=-1)
     nb = xp.shape[0] // block
     cv, ci, cs = _st.segmented_topk(xp.reshape(nb, block),
                                     segp.reshape(nb, block), kcap, n_cand,
-                                    interpret=interpret)
+                                    extract=extract, interpret=interpret)
     return cv.reshape(-1), ci.reshape(-1), cs.reshape(-1)
 
 
 @functools.partial(jax.jit, static_argnames=("use_momentum", "n_cand",
-                                             "block", "interpret"))
+                                             "block", "extract",
+                                             "interpret"))
 def fused_ef_topk(g, u, v, seg, kcap, momentum, use_momentum: bool,
                   n_cand: int, block: int = SEG_BLOCK,
-                  interpret: bool = True):
+                  extract: str = "loop", interpret: bool = True):
     """One-sweep EF accumulate + segmented top-k candidates (auto-padded).
 
     u' = m*u + g, v' = v + u' (plain v + g when use_momentum=False) and
@@ -139,7 +143,7 @@ def fused_ef_topk(g, u, v, seg, kcap, momentum, use_momentum: bool,
     u2, v2, cv, ci, cs = _ef.sparsify_ef_topk(
         gp.reshape(nb, block), up.reshape(nb, block), vp.reshape(nb, block),
         segp.reshape(nb, block), kcap, jnp.asarray(momentum, jnp.float32),
-        use_momentum, n_cand, interpret=interpret)
+        use_momentum, n_cand, extract=extract, interpret=interpret)
     return u2[:n], v2[:n], cv.reshape(-1), ci.reshape(-1), cs.reshape(-1)
 
 

@@ -21,6 +21,13 @@ crowd a small leaf's winners out with a big leaf's values.  Tie-break
 (equal |value|) is lowest-index-first, matching lax.top_k's stable
 order, so the merged result is *identical* to the per-leaf reference —
 not just equivalent.
+
+Per-block extraction is pluggable (``extract=``): "loop" is the
+sequential candidate loop above (O(n_cand) global reductions per
+block, cheapest at small k); "bitonic" is the lanes-parallel sorting
+network in kernels/bitonic.py (O(log² block) stages independent of k,
+the large-k backend).  Both are bit-identical — the dispatch changes
+cost only, never output.
 """
 from __future__ import annotations
 
@@ -76,6 +83,17 @@ def select_candidates(x, seg, kcap, n_cand: int, block: int):
     return vals, idxs, segs
 
 
+def extract_fn(extract: str):
+    """Resolve an extraction-backend name to its per-block function.
+    Lazy import: bitonic.py is only pulled in when selected."""
+    if extract == "loop":
+        return select_candidates
+    if extract == "bitonic":
+        from repro.kernels.bitonic import select_candidates_bitonic
+        return select_candidates_bitonic
+    raise ValueError(f"unknown extract backend: {extract!r}")
+
+
 def sweep_specs(rows: int, n_cand: int, n_slots: int):
     """Shared pallas_call scaffolding for the segmented-sweep kernels
     (this one and sparsify_ef.sparsify_ef_topk): per-block tile spec,
@@ -94,18 +112,20 @@ def cand_out_shapes(n_blocks: int, n_cand: int, dtype):
 
 
 def _kernel(x_ref, seg_ref, kcap_ref, vals_ref, idx_ref, seg_out_ref, *,
-            n_cand: int, block: int):
-    vals, idxs, segs = select_candidates(x_ref[0], seg_ref[0], kcap_ref[...],
-                                         n_cand, block)
+            n_cand: int, block: int, extract: str):
+    vals, idxs, segs = extract_fn(extract)(x_ref[0], seg_ref[0],
+                                           kcap_ref[...], n_cand, block)
     base = pl.program_id(0) * block
     vals_ref[0, :] = vals
     idx_ref[0, :] = base + idxs
     seg_out_ref[0, :] = segs
 
 
-@functools.partial(jax.jit, static_argnames=("n_cand", "interpret"))
+@functools.partial(jax.jit,
+                   static_argnames=("n_cand", "extract", "interpret"))
 def segmented_topk(x: jnp.ndarray, seg: jnp.ndarray, kcap: jnp.ndarray,
-                   n_cand: int, interpret: bool = True):
+                   n_cand: int, extract: str = "loop",
+                   interpret: bool = True):
     """x, seg: (n_blocks, block) f32/int32, block % 128 == 0; kcap:
     (n_slots,) int32 per-slot caps.  Returns per-block candidate triples
     (vals (n_blocks, n_cand), idx (n_blocks, n_cand) in GLOBAL element
@@ -113,7 +133,8 @@ def segmented_topk(x: jnp.ndarray, seg: jnp.ndarray, kcap: jnp.ndarray,
     n_blocks, block = x.shape
     assert block % LANE == 0, block
     rows = block // LANE
-    kern = functools.partial(_kernel, n_cand=n_cand, block=block)
+    kern = functools.partial(_kernel, n_cand=n_cand, block=block,
+                             extract=extract)
     tile, cand, kspec = sweep_specs(rows, n_cand, kcap.shape[0])
     return pl.pallas_call(
         kern,

@@ -32,8 +32,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.segmented_topk import (cand_out_shapes,
-                                          select_candidates, sweep_specs)
+from repro.kernels.segmented_topk import (cand_out_shapes, extract_fn,
+                                          sweep_specs)
 
 TILE = 64 * 1024          # elements per VMEM tile (f32: 256 KiB per operand)
 LANE = 128                # TPU lane width; tiles are (TILE//LANE, LANE)
@@ -90,7 +90,8 @@ def sparsify_ef(g: jnp.ndarray, u: jnp.ndarray, v: jnp.ndarray,
 
 def _ef_topk_kernel(g_ref, u_ref, v_ref, seg_ref, kcap_ref, scal_ref,
                     u_out_ref, v_out_ref, vals_ref, idx_ref, seg_out_ref,
-                    *, use_momentum: bool, n_cand: int, block: int):
+                    *, use_momentum: bool, n_cand: int, block: int,
+                    extract: str):
     g = g_ref[0]
     u = u_ref[0]
     v = v_ref[0]
@@ -102,8 +103,8 @@ def _ef_topk_kernel(g_ref, u_ref, v_ref, seg_ref, kcap_ref, scal_ref,
         v_new = v + g
     u_out_ref[0] = u_new
     v_out_ref[0] = v_new
-    vals, idxs, segs = select_candidates(v_new, seg_ref[0], kcap_ref[...],
-                                         n_cand, block)
+    vals, idxs, segs = extract_fn(extract)(v_new, seg_ref[0], kcap_ref[...],
+                                           n_cand, block)
     base = pl.program_id(0) * block
     vals_ref[0, :] = vals
     idx_ref[0, :] = base + idxs
@@ -111,11 +112,13 @@ def _ef_topk_kernel(g_ref, u_ref, v_ref, seg_ref, kcap_ref, scal_ref,
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("use_momentum", "n_cand", "interpret"))
+                   static_argnames=("use_momentum", "n_cand", "extract",
+                                    "interpret"))
 def sparsify_ef_topk(g: jnp.ndarray, u: jnp.ndarray, v: jnp.ndarray,
                      seg: jnp.ndarray, kcap: jnp.ndarray,
                      momentum: jnp.ndarray, use_momentum: bool,
-                     n_cand: int, interpret: bool = True):
+                     n_cand: int, extract: str = "loop",
+                     interpret: bool = True):
     """Fused Algorithm 1/2 inner loop + exact segmented selection.
 
     g, u, v, seg: (n_blocks, block); kcap: (n_slots,) int32.  Returns
@@ -128,7 +131,7 @@ def sparsify_ef_topk(g: jnp.ndarray, u: jnp.ndarray, v: jnp.ndarray,
     rows = block // LANE
     scal = jnp.asarray(momentum, jnp.float32).reshape(1)
     kern = functools.partial(_ef_topk_kernel, use_momentum=use_momentum,
-                             n_cand=n_cand, block=block)
+                             n_cand=n_cand, block=block, extract=extract)
     tile, cand, kspec = sweep_specs(rows, n_cand, kcap.shape[0])
     out = pl.pallas_call(
         kern,

@@ -49,6 +49,12 @@ def parse_args(argv=None):
                    choices=["jnp", "pallas"],
                    help="phase-3 encoder backend (pallas = im2col + "
                         "fused MXU matmul kernel, ops.lgc_encode_fast)")
+    p.add_argument("--extract-backend", default="auto",
+                   choices=["auto", "loop", "bitonic"],
+                   help="per-block candidate extractor inside the fused "
+                        "sweep: the sequential argmax loop, the bitonic "
+                        "partial sort (k-independent depth), or auto "
+                        "(bitonic once 8*k_max outgrows the max block)")
     p.add_argument("--topk-compiled", action="store_true",
                    help="compile ALL Pallas kernels — selection backends "
                         "AND the --ae-backend pallas encoder (real TPUs); "
@@ -110,6 +116,7 @@ def main(argv=None):
                            transport=args.transport,
                            topk_backend=args.topk_backend,
                            ae_backend=args.ae_backend,
+                           extract_backend=args.extract_backend,
                            topk_interpret=not args.topk_compiled)
     tc = TrainConfig(optimizer=args.optimizer, learning_rate=args.lr,
                      steps=args.steps, seed=args.seed, compression=cc)
