@@ -3,8 +3,16 @@ of the three gradient-update phases (full / top-k+AE / compressed), for
 both LGC variants.  Run at smoke scale on the simulated-nodes path; the
 paper's observation to reproduce: compressed updates are CHEAPER per
 iteration than top-k+AE-training updates, and the RAR variant is cheaper
-than PS."""
+than PS.
+
+    python -m benchmarks.table5_phase_timing [--topk-backend fused]
+        [--extract-backend auto|loop|bitonic]
+
+selects the sparsification path the timed steps run (the fused sweep's
+resolved plan is reported as a fused_plan row)."""
 from __future__ import annotations
+
+import argparse
 
 import jax
 import jax.numpy as jnp
@@ -12,6 +20,7 @@ import jax.numpy as jnp
 from benchmarks.common import row, time_call
 from repro.configs.base import CompressionConfig
 from repro.core import build_compressor
+from repro.core import sparsify as SP
 from repro.core.phases import PHASE_COMPRESSED, PHASE_TOPK_AE, PHASE_WARMUP
 
 K = 4
@@ -25,11 +34,26 @@ PARAMS = {
 
 
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--topk-backend", default="jnp",
+                    choices=("jnp", "pallas", "fused"))
+    ap.add_argument("--extract-backend", default="auto",
+                    choices=sorted(SP.EXTRACT_BACKENDS),
+                    help="fused sweep's per-block candidate extractor")
+    args = ap.parse_args()
     for method in ("lgc_ps", "lgc_rar"):
         cc = CompressionConfig(method=method, sparsity=0.01,
                                innovation_sparsity=0.001, warmup_steps=1,
-                               ae_train_steps=2)
+                               ae_train_steps=2,
+                               topk_backend=args.topk_backend,
+                               extract_backend=args.extract_backend)
         comp = build_compressor(cc, PARAMS, K)
+        info = SP.fused_plan_info(comp.layout,
+                                  extract=args.extract_backend)
+        row(f"table5/{method}/fused_plan", 0.0,
+            f"backend={args.topk_backend} block={info['fused_block']} "
+            f"n_cand={info['n_cand']} "
+            f"extract={info['extract_backend']}")
         states = comp.init_sim_states(jax.random.PRNGKey(0))
         g = jax.random.normal(jax.random.PRNGKey(1),
                               (K, comp.layout.n_total)) * 0.01

@@ -16,7 +16,10 @@ a fake-4-device subprocess that exercises EVERY distributed transport in
                             the documented q8 bound); float wires stay
                             exact, so only ring_packed runs opt into it
 
-Exits nonzero on any divergence — run by scripts/ci.sh.  The measured
+Exits nonzero on any divergence — run by scripts/ci.sh.  Also prints the
+per-op wire trace (``wire_report(by_op=True)``): which exchange-plan op
+moved which bytes through which collective, gated against the plan
+pricer's ``wire_terms_by_op`` (the op-level wire contract).  The measured
 ring wire bytes are reported against the analytic all-reduce bound
 (derived column = per-node wire bytes, the quantity the paper's Tables
 IV/VI are about), and the packed sparse exchange is gated at <= 0.35x of
@@ -183,6 +186,79 @@ print(run("ring", "sparse_mean"), run("ring_packed", "sparse_mean_packed"))
             f"{PACKED_RATIO_BOUND}x bound")
 
 
+def plan_trace_rows():
+    """The per-op wire trace: lower one steady-state step per method on
+    the packed wire and print where every byte went, by exchange-plan op
+    label (``collectives.wire_report(by_op=True)``).  CI-gates that the
+    measured per-op tally equals the plan pricer's ``wire_terms_by_op``
+    — the op-level refinement of the aggregate wire contract."""
+    code = """
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P
+from repro.configs.base import CompressionConfig
+from repro.core import build_compressor
+from repro.dist import collectives as C
+from repro.dist import plan as XP
+
+params = {"embed": {"w": jnp.zeros((32, 16))},
+          "layer1": {"w": jnp.zeros((64, 64))},
+          "layer2": {"w": jnp.zeros((64, 64))},
+          "lm_head": {"w": jnp.zeros((16, 32))}}
+K = 4
+mesh = jax.make_mesh((K,), ("data",),
+                     axis_types=(jax.sharding.AxisType.Auto,))
+for method in ("dgc", "lgc_rar_q8", "lgc_ps"):
+    transport = "ring_q8" if method == "lgc_rar_q8" else "ring_packed"
+    cc = CompressionConfig(method=method, sparsity=0.05,
+                           innovation_sparsity=0.005, warmup_steps=1,
+                           ae_train_steps=2, transport=transport)
+    comp = build_compressor(cc, params, K)
+    n = comp.layout.n_total
+    base = comp.init_state(jax.random.PRNGKey(0))
+    ae_keys = tuple(k for k in ("ae", "ae_mom") if k in base)
+    phase = XP.steady_phase(method)
+
+    def inner(uv, ae_part, g):
+        st = {"u": uv["u"][0], "v": uv["v"][0], **ae_part}
+        gg, ns, _ = comp.dist_step(st, g[0], jnp.asarray(3), phase,
+                                   ("data",))
+        return (gg, {"u": ns["u"][None], "v": ns["v"][None]},
+                {k: ns[k] for k in ae_keys})
+    f = jax.jit(jax.shard_map(
+        inner, mesh=mesh,
+        in_specs=({"u": P("data"), "v": P("data")}, P(), P("data")),
+        out_specs=(P(), {"u": P("data"), "v": P("data")}, P()),
+        axis_names={"data"}, check_vma=False))
+    sds = jax.ShapeDtypeStruct
+    uv_s = {"u": sds((K, n), "float32"), "v": sds((K, n), "float32")}
+    ae_s = jax.tree_util.tree_map(lambda a: sds(a.shape, a.dtype),
+                                  {k: base[k] for k in ae_keys})
+    C.reset_wire_tally()
+    f.lower(uv_s, ae_s, sds((K, n), "float32"))
+    measured = C.wire_report(by_op=True)
+    priced = XP.wire_terms_by_op(XP.build_plan(cc, comp.layout, K))
+    assert set(measured) == set(priced), (method, measured, priced)
+    for label in priced:
+        for kind in set(measured[label]) | set(priced[label]):
+            assert np.isclose(measured[label].get(kind, 0),
+                              priced[label].get(kind, 0), rtol=1e-9), (
+                method, label, kind)
+    for label, terms in measured.items():
+        print("TRACE", method, transport, label,
+              "+".join(sorted(terms)), int(sum(terms.values())))
+print("TRACE-PASS")
+"""
+    out = _traced_subprocess(code, 4)
+    if "TRACE-PASS" not in out:
+        raise SystemExit("per-op wire trace gate failed")
+    for line in out.splitlines():
+        if line.startswith("TRACE "):
+            _, method, transport, label, kinds, nbytes = line.split()
+            row(f"transports/wire_by_op_{method}_{label}", 0.0,
+                f"{nbytes}B via {kinds} on {transport} "
+                "(== plan.wire_terms_by_op)")
+
+
 def dist_transport_gate():
     """Every distributed transport vs the Sim oracle on a fake 4-device
     mesh (subprocess for the forced device count).  Raises on
@@ -280,6 +356,7 @@ def main():
     sim_latency_rows()
     ring_wire_row()
     packed_wire_row()
+    plan_trace_rows()
     dist_transport_gate()
 
 

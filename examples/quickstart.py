@@ -1,15 +1,33 @@
 """Quickstart: compress the gradients of a toy model with LGC in ~30 lines.
 
-    PYTHONPATH=src python examples/quickstart.py
+    PYTHONPATH=src python examples/quickstart.py [--topk-backend fused]
+        [--extract-backend auto|loop|bitonic]
+
+``--topk-backend fused`` runs the sparsification hot path as ONE
+segmented sweep; ``--extract-backend`` picks its per-block candidate
+extractor (auto sizes by the layout — see the printed fused_plan_info).
 """
+import argparse
+
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import CompressionConfig
 from repro.core import build_compressor
+from repro.core import sparsify as SP
 from repro.core.phases import phase_for_step
 from repro.core.rate import rate_report
 from repro.utils.tree import tree_flatten_vector, tree_unflatten_vector
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--topk-backend", default="jnp",
+                choices=("jnp", "pallas", "fused"),
+                help="top-k selection path (fused = single-sweep kernel)")
+ap.add_argument("--extract-backend", default="auto",
+                choices=sorted(SP.EXTRACT_BACKENDS),
+                help="fused sweep's per-block candidate extractor "
+                     "(only used with --topk-backend fused)")
+args = ap.parse_args()
 
 # a toy two-layer model, K=4 simulated nodes
 params = {"embed": {"w": jnp.zeros((64, 32))},
@@ -19,11 +37,18 @@ params = {"embed": {"w": jnp.zeros((64, 32))},
 K = 4
 
 cc = CompressionConfig(method="lgc_rar", sparsity=0.01,
-                       warmup_steps=2, ae_train_steps=5)
+                       warmup_steps=2, ae_train_steps=5,
+                       topk_backend=args.topk_backend,
+                       extract_backend=args.extract_backend)
 comp = build_compressor(cc, params, K)
 states = comp.init_sim_states(jax.random.PRNGKey(1))
 print(f"gradient vector n={comp.layout.n_total}, top-k mu={comp.layout.mu}, "
       f"AE input mu_pad={comp.layout.mu_pad}")
+info = SP.fused_plan_info(comp.layout, extract=args.extract_backend)
+print(f"fused sweep plan: block={info['fused_block']} "
+      f"n_cand={info['n_cand']} extract={info['extract_backend']}"
+      + ("" if args.topk_backend == "fused" else "  [not active: "
+         f"--topk-backend {args.topk_backend}]"))
 
 report = rate_report(cc, comp.layout, K)
 print(f"rate: {report.bytes_per_node:.0f} B/node/step "

@@ -1,5 +1,7 @@
 #!/usr/bin/env bash
-# CI smoke gate: pinned deps, tier-1 tests, kernel micro-bench (loop vs
+# CI smoke gate: the exchange-plan layering lint (wire transfer calls
+# confined to dist/transport.py + dist/plan.py), pinned deps, tier-1
+# tests, kernel micro-bench (loop vs
 # bitonic extraction rows, exact-gated, written to BENCH_kernels.json),
 # the step-latency bench (perf trajectory + fused-vs-jnp 1e-5 gate), the
 # transport gate (every transport in TRANSPORTS vs the Sim oracle:
@@ -17,6 +19,81 @@ if [[ "${1:-}" != "--no-install" ]]; then
 fi
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "=== exchange-plan layering lint (collectives only behind transport/plan) ==="
+# The exchange-plan IR's layering invariant: production code reaches the
+# wire ONLY through the Transport protocol (dist/transport.py) or the
+# plan executor/pricers (dist/plan.py).  A direct collectives call
+# anywhere else would move bytes the op list — and therefore the rate
+# accounting — doesn't know about.  Token-level scan (not grep) so
+# docstring prose mentioning the collectives doesn't false-positive;
+# the tally accessors (wire_op/wire_report/record_wire_bytes/
+# reset_wire_tally) are observability, not transfer, and stay allowed.
+python - <<'EOF'
+import io, pathlib, re, sys, tokenize
+
+TRANSFER = {"psum", "pmean", "all_gather", "ring_allreduce",
+            "ring_allreduce_multi", "ring_allreduce_q8",
+            "ring_allreduce_q8_multi", "hierarchical_ring_allreduce",
+            "all_gather_packed", "broadcast", "ring_broadcast",
+            "ring_broadcast_packed"}
+ALLOWED = {"src/repro/dist/collectives.py", "src/repro/dist/transport.py",
+           "src/repro/dist/plan.py", "src/repro/dist/__init__.py"}
+bad = []
+for path in sorted(pathlib.Path("src/repro").rglob("*.py")):
+    rel = path.as_posix()
+    if rel in ALLOWED:
+        continue
+    src = path.read_text()
+    # module aliases that expose the collectives (or the re-exporting
+    # repro.dist package), plus transfer names imported directly
+    aliases, direct = set(), set()
+    for m in re.finditer(
+            r"^\s*from\s+repro\.dist\s+import\s+(.+)$|"
+            r"^\s*from\s+repro\.dist\.collectives\s+import\s+(.+)$|"
+            r"^\s*import\s+repro\.dist\.collectives"
+            r"(?:\s+as\s+(\w+))?|"
+            r"^\s*import\s+repro\.dist(?:\s+as\s+(\w+))?\s*$",
+            src, re.M):
+        pkg_items, coll_items, coll_as, pkg_as = m.groups()
+        if coll_as or m.group(0).strip().startswith(
+                "import repro.dist.collectives"):
+            aliases.add(coll_as or "repro")      # repro.dist.collectives.x
+        if pkg_as is not None or (pkg_items is None and coll_items is None
+                                  and coll_as is None):
+            aliases.add(pkg_as or "repro")
+        for items in (pkg_items, coll_items):
+            if not items:
+                continue
+            for item in items.split(","):
+                name, *as_name = [w.strip() for w in item.split(" as ")]
+                bound = as_name[0] if as_name else name
+                if name == "collectives":
+                    aliases.add(bound)
+                elif name in TRANSFER:
+                    direct.add(bound)
+                    bad.append(f"{rel}: imports collectives entry point "
+                               f"'{name}'")
+    toks = list(tokenize.generate_tokens(io.StringIO(src).readline))
+    for i, tok in enumerate(toks):
+        if tok.type != tokenize.NAME or tok.string not in TRANSFER:
+            continue
+        prev = next((t for t in reversed(toks[:i])
+                     if t.type not in (tokenize.NL, tokenize.NEWLINE,
+                                       tokenize.INDENT, tokenize.COMMENT)),
+                    None)
+        dotted = prev is not None and prev.string == "."
+        owner = toks[i - 2].string if dotted and i >= 2 else None
+        if (not dotted and tok.string in direct) or \
+                (dotted and owner in aliases):
+            bad.append(f"{rel}:{tok.start[0]}: {tok.line.strip()}")
+if bad:
+    print("collectives entry points referenced outside dist/transport.py"
+          " / dist/plan.py:\n" + "\n".join(bad))
+    sys.exit(1)
+print(f"layering lint OK: {len(TRANSFER)} transfer entry points confined"
+      " to transport/plan")
+EOF
 
 echo "=== tier-1 tests ==="
 python -m pytest -x -q
@@ -47,7 +124,7 @@ EOF
 echo "=== step-latency bench (fused/pallas gated vs jnp oracle at 1e-5) ==="
 python -m benchmarks.step_latency_bench --out BENCH_step_latency.json
 
-echo "=== transport gate (mesh/ring/ring_hier/ring_packed exact, ring_q8 quant-tol, packed <=0.35x f32 sparse wire) ==="
+echo "=== transport gate (mesh/ring/ring_hier/ring_packed exact, ring_q8 quant-tol, packed <=0.35x f32 sparse wire, per-op trace == plan pricer) ==="
 python -m benchmarks.transports_bench
 
 echo "=== LGC end-to-end smoke (every distributed transport) ==="

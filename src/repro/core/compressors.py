@@ -10,7 +10,14 @@ Five methods, matching the paper's experimental comparison (Tables IV/VI):
   lgc_rar_q8  beyond-paper: lgc_rar with int8-quantized encodings
 
 Every method is written ONCE, in :meth:`GradientCompressor.step`, against
-the :class:`repro.dist.transport.Transport` protocol.  The substrate —
+the :class:`repro.dist.transport.Transport` protocol.  ``step`` does not
+call the transport directly: it compiles the method's exchange sequence
+with ``repro.dist.plan.build_plan`` (the exchange-plan IR) and supplies
+per-op feed callbacks to ``plan.execute`` — the SAME op objects price
+``rate.rate_report``/``wire_payload_terms``, so the bytes a step moves
+and the bytes the accounting reports agree by construction, and the
+trace-time tally attributes every byte to the op label that shipped it
+(``collectives.wire_report(by_op=True)``).  The substrate —
 *how bytes move between nodes* — is injected:
 
   * ``MeshTransport``  lax collectives inside a fully-manual shard_map on
@@ -72,7 +79,13 @@ from repro.core.phases import (PHASE_COMPRESSED, PHASE_TOPK_AE, PHASE_WARMUP)
 # family's cross-node exchange is the dense encoding reduction, which
 # the int8 ring (mean_q8) already covers.  Defined beside the codec so
 # rate.py prices exactly the set dispatched here.
-from repro.dist.packed import PACKED_METHODS
+from repro.dist.packed import PACKED_METHODS  # noqa: F401  (re-export)
+# the exchange-plan IR: build_plan compiles the method's exchanges into
+# typed ops; execute runs them against the transport; the SAME op
+# objects drive rate.py's byte accounting.  Imported after the core.*
+# imports above so the plan module's own repro.core imports resolve
+# against the already-initialized submodules.
+from repro.dist import plan as XP
 from repro.dist.transport import Transport, make_transport
 
 Axis = Sequence[str]
@@ -199,6 +212,15 @@ class GradientCompressor:
         """Compress per-node gradients and return the *global* (aggregated)
         gradient vector plus the new compressor state.
 
+        The cross-node exchanges are NOT dispatched here: ``build_plan``
+        compiles this (method, phase, transport) into the exchange-plan
+        IR (repro.dist.plan) and ``execute`` runs the ops in plan order
+        against ``t`` — this method only supplies the per-node compute
+        (accumulate/select/encode/decode) as feed callbacks between ops.
+        Because rate.py prices the SAME op objects, a step cannot ship
+        an exchange the accounting doesn't know about (and vice versa —
+        the executor asserts feeds == plan labels both ways).
+
         Value convention (see repro.dist.transport): ``g`` and
         ``state["u"]/state["v"]`` are per-node; ``state["ae"]`` and the
         returned global gradient are global.  Under SimTransport per-node
@@ -207,9 +229,12 @@ class GradientCompressor:
         """
         cc, layout, n = self.cc, self.layout, self.layout.n_total
         stats: Dict[str, jnp.ndarray] = {}
+        plan = XP.build_plan(cc, layout, self.K, transport=t.kind,
+                             phase=phase)
 
         if phase == PHASE_WARMUP or cc.method == "none":
-            return t.mean(g), state, stats
+            env = XP.execute(plan, t, {"grad": lambda env: g})
+            return env["grad"], state, stats
 
         fused = cc.topk_backend == "fused"
         if fused:
@@ -227,16 +252,15 @@ class GradientCompressor:
 
         # exempt-dense part: reduce ONLY the dense segments (not an
         # n-length mostly-zero vector — that would put dense-gradient
-        # traffic back on the wire)
+        # traffic back on the wire).  Which wire the exempt-last (and
+        # every other sparse) exchange rides is the PLAN's decision:
+        # PackedSparseExchange ops carry the PackPlan the packed
+        # transport ships, SparseExchange ops stay on the exact f32 wire.
         dense_seg = t.pernode(lambda gg: SP.dense_segments(gg, layout))(g)
-        g_dense = SP.scatter_dense_segments(t.mean(dense_seg), layout, n)
-        # the sparse methods' top-k exchanges (exempt-last included) ride
-        # the packed wire: bit-packed indices + int8 values on
-        # ring_packed (the wire's documented q8 bound), exact f32 pairs
-        # on every other transport
-        packed = cc.method in PACKED_METHODS
-        sparse_mean = t.sparse_mean_packed if packed else t.sparse_mean
-        last_global = sparse_mean(last_vals, last_idx, n)
+        feeds = {
+            "exempt_dense": lambda env: dense_seg,
+            "exempt_last": lambda env: (last_vals, last_idx),
+        }
 
         # combined clear: compressed + exempt-last index sets zeroed in a
         # single scatter pass over each accumulator (2 passes, not 4)
@@ -245,10 +269,16 @@ class GradientCompressor:
         clear_own = t.pernode(clear2, in_axes=(0, 0, 0, 0))
         clear_shared = t.pernode(clear2, in_axes=(0, 0, None, 0))
 
+        def g_dense_of(env):
+            return SP.scatter_dense_segments(env["exempt_dense"],
+                                             layout, n)
+
         if cc.method in ("sparse_gd", "dgc"):
             vals, idx = (f_vals, f_idx) if fused \
                 else t.pernode(self._select)(v)
-            global_g = sparse_mean(vals, idx, n) + g_dense + last_global
+            feeds["topk"] = lambda env: (vals, idx)
+            env = XP.execute(plan, t, feeds)
+            global_g = env["topk"] + g_dense_of(env) + env["exempt_last"]
             u, v = clear_own(u, v, idx, last_idx)
             return global_g, {**state, "u": u, "v": v}, stats
 
@@ -272,8 +302,15 @@ class GradientCompressor:
         # transport-equivalence gates to stay bitwise (a set in a
         # different order would reorder the AE's input vector)
         own_idx = jnp.sort(own_idx, axis=-1)
-        idx = t.broadcast_packed(own_idx, leader, n)         # global (mu_pad,)
-        vals = t.pernode(SP.gather_at, in_axes=(0, None))(v, idx)  # per-node
+        feeds["support"] = lambda env: (own_idx, leader)
+
+        def vals_of(env):
+            # per-node gather at the broadcast support — memoized in env
+            # so every feed past "support" shares one gather
+            if "_vals" not in env:
+                env["_vals"] = t.pernode(SP.gather_at, in_axes=(0, None))(
+                    v, env["support"])
+            return env["_vals"]
 
         is_ps = cc.method == "lgc_ps"
         if is_ps:
@@ -283,16 +320,25 @@ class GradientCompressor:
                 vec, ii = SP.select_innovation(x, frac)
                 return vec, x[ii], ii          # in-place vec + sparse pair
 
-            inno, inno_vals, inno_idx = t.pernode(_innovation)(vals)
+            def inno_of(env):
+                if "_inno" not in env:
+                    env["_inno"] = t.pernode(_innovation)(vals_of(env))
+                return env["_inno"]
 
         if phase == PHASE_TOPK_AE:
             # top-k updates + online AE training on the gathered vectors.
             # indices are shared (CLT-k) so reducing the mu-length values
             # vector IS the whole cross-node exchange.
-            sent = SP.scatter_to_dense(t.mean(vals), idx, n)
-            global_g = sent + g_dense + last_global
-            g_nodes = t.all_gather(vals)                     # (K, mu_pad)
-            inno_nodes = t.all_gather(inno) if is_ps else None
+            feeds["support_vals"] = vals_of
+            feeds["gather_vals"] = vals_of
+            if is_ps:
+                feeds["gather_inno"] = lambda env: inno_of(env)[0]
+            env = XP.execute(plan, t, feeds)
+            idx = env["support"]                             # (mu_pad,)
+            sent = SP.scatter_to_dense(env["support_vals"], idx, n)
+            global_g = sent + g_dense_of(env) + env["exempt_last"]
+            g_nodes = env["gather_vals"]                     # (K, mu_pad)
+            inno_nodes = env["gather_inno"] if is_ps else None
             ae, ae_mom, ae_loss = self._ae_update(state, g_nodes,
                                                   inno_nodes, step,
                                                   t.ae_axes)
@@ -312,26 +358,30 @@ class GradientCompressor:
             # The innovation exchange is sparse (k_inv values + local
             # indices within the mu_pad support) and rides the packed
             # wire — NOT a mu_pad-length in-place f32 all_gather.
-            z_own = t.pernode(encode)(vals)
-            z_common = t.from_leader(z_own, leader)
-            inno_nodes = t.sparse_gather_packed(
-                inno_vals, inno_idx, layout.mu_pad)          # (K, mu_pad)
-            recs = AE.lgc_decode_ps(state["ae"], z_common, inno_nodes)
+            feeds["z_common"] = lambda env: (
+                t.pernode(encode)(vals_of(env)), leader)
+            feeds["innovations"] = lambda env: (inno_of(env)[1],
+                                                inno_of(env)[2])
+            env = XP.execute(plan, t, feeds)
+            idx = env["support"]
+            recs = AE.lgc_decode_ps(state["ae"], env["z_common"],
+                                    env["innovations"])      # (K, mu_pad)
             rec_dense = SP.scatter_to_dense(recs.mean(0), idx, n)
         else:
             # RAR (eq. 17-19): encode -> average (THE all-reduce) -> decode.
-            # lgc_rar_q8's encoding reduction rides the int8 wire: REAL on
-            # RingQ8Transport (quantize-forward ring, ~1 byte/value
-            # measured), fake-quantized through the same
-            # repro.dist.quantize module then reduced in f32 everywhere
-            # else — so Sim/Mesh/Ring == RingQ8 up to the wire's bounded
-            # requantization error.
-            z = t.pernode(encode)(vals)
-            z_avg = t.mean_q8(z) if cc.method == "lgc_rar_q8" else t.mean(z)
-            rec = AE.lgc_decode_rar(state["ae"], z_avg[None])[0]
+            # lgc_rar_q8's encoding reduction is a Reduce op with
+            # wire="q8": REAL int8 on RingQ8Transport (quantize-forward
+            # ring, ~1 byte/value measured), fake-quantized through the
+            # same repro.dist.quantize module then reduced in f32
+            # everywhere else — so Sim/Mesh/Ring == RingQ8 up to the
+            # wire's bounded requantization error.
+            feeds["encoding"] = lambda env: t.pernode(encode)(vals_of(env))
+            env = XP.execute(plan, t, feeds)
+            idx = env["support"]
+            rec = AE.lgc_decode_rar(state["ae"], env["encoding"][None])[0]
             rec_dense = SP.scatter_to_dense(rec, idx, n)
 
-        global_g = rec_dense + g_dense + last_global
+        global_g = rec_dense + g_dense_of(env) + env["exempt_last"]
         u, v = clear_shared(u, v, idx, last_idx)
         return global_g, {**state, "u": u, "v": v}, stats
 

@@ -1,4 +1,5 @@
-"""Transmission-rate accounting (paper Section VI-A).
+"""Transmission-rate accounting (paper Section VI-A) — derived from the
+exchange-plan IR, not re-derived by hand.
 
 The paper reports CR = size(G_original)/size(G_compressed) per node, with
 transmitted top-k *indices* entropy-coded using DEFLATE and counted in the
@@ -6,7 +7,17 @@ total rate.  These are host-side (non-jit) functions operating on the
 layout constants plus, when available, concrete index arrays for exact
 DEFLATE byte counts.
 
-Per-node per-iteration payloads:
+Neither :func:`rate_report` nor :func:`wire_payload_terms` contains a
+per-method exchange dispatch of its own anymore: both call
+``repro.dist.plan.build_plan`` — the SAME compiler whose op list the
+compressor step executes — and price the resulting op objects
+(``plan.rate_terms`` / ``plan.wire_terms``).  Measured and accounted
+bytes therefore share one source of truth: an exchange the step ships
+but the accounting misses (or vice versa) is impossible by construction,
+because there is exactly one op list and the executor asserts the step
+feeds it completely.
+
+Per-node per-iteration payloads the op pricing reproduces:
   baseline    n * 4 bytes
   sparse_gd   k_total * 4 + deflate(indices)   [f32 wires]
   dgc         k_total * 4 + deflate(indices)   [f32 wires]
@@ -44,10 +55,8 @@ from typing import Dict, Optional, Sequence
 import numpy as np
 
 from repro.configs.base import CompressionConfig
-from repro.core import autoencoder as AE
-from repro.core.sparsify import GradientLayout, innovation_frac, innovation_k
-from repro.dist import packed as PK
-from repro.dist import quantize as Q
+from repro.core.sparsify import GradientLayout
+from repro.dist import plan as XP
 
 BYTES_F32 = 4
 BYTES_I32 = 4
@@ -85,100 +94,29 @@ def rate_report(cc: CompressionConfig, layout: GradientLayout, K: int,
     the honest total including it.
 
     ``transport`` (default: ``cc.transport``) decides what the
-    compressed payloads *really* are: for ``lgc_rar_q8`` the encoding
-    costs ~1 byte/value + per-block scale overhead on the int8 wire
-    ("ring_q8") and the full 4 bytes/value on every float-wire
-    transport; for the sparse methods (sparse_gd/dgc/lgc_ps) the top-k
-    and innovation exchanges cost their real packed size — int8 values
-    + bucket counts + bit-packed low index bits — on the packed wire
-    ("ring_packed"), and f32 values + DEFLATE-estimated indices
-    elsewhere.  The lgc family's leader index set likewise costs its
-    real packed-index size on "ring_packed" (bit-exact — bytes change,
-    numerics don't) and the deflate estimate elsewhere.  Fake
-    quantization saves nothing on the wire, and this report no longer
-    pretends it does."""
-    n = layout.n_total
-    baseline = n * BYTES_F32
-    tkind = transport if transport is not None else cc.transport
-    sb = cc.q8_scale_block or Q.SCALE_BLOCK
-    on_packed_wire = (tkind == "ring_packed"
-                      and cc.method in PK.PACKED_METHODS)
-    dense_bytes = (sum(l.size for l in layout.dense) * BYTES_F32
-                   if count_exempt else 0)
-    if on_packed_wire:
-        last_bytes = (PK.wire_nbytes(PK.make_plan(n, layout.k_last, sb))
-                      if layout.k_last else 0)
-    else:
-        last_bytes = (layout.k_last * (BYTES_F32)
-                      + deflate_bytes(None, layout.k_last, n))
-    k_total = layout.mu
-
-    if cc.method == "none":
-        b = baseline
-        return RateReport(cc.method, b, b, b, baseline, 1.0, 1.0, 1.0)
-
-    if cc.method in ("sparse_gd", "dgc") and on_packed_wire:
-        # the REAL payload: mu_pad (value, index) pairs — sentinel
-        # padding included — at int8 + packed-index wire size, from
-        # the same plan the transport ships (no deflate estimate)
-        b = dense_bytes + last_bytes + PK.wire_nbytes(
-            PK.make_plan(n, layout.mu_pad, sb))
-        cr = baseline / b
-        return RateReport(cc.method, b, b, b, baseline, cr, cr, cr)
-
-    idx_bytes = deflate_bytes(indices, k_total, n)
-
-    if cc.method in ("sparse_gd", "dgc"):
-        b = dense_bytes + last_bytes + k_total * BYTES_F32 + idx_bytes
-        cr = baseline / b
-        return RateReport(cc.method, b, b, b, baseline, cr, cr, cr)
-
-    mu_pad = layout.mu_pad
-    if tkind == "ring_packed":
-        # the lgc leader index set rides the packed index wire on this
-        # transport (transport.broadcast_packed): mu_pad sorted indices
-        # — sentinel padding included — as bucket counts + bit-packed
-        # low bits, which REPLACES the deflate estimate with the
-        # structural size of the bytes actually shipped (bit-exact
-        # decode, so this term is the only thing that changes)
-        idx_bytes = PK.index_nbytes(PK.make_plan(n, mu_pad, sb))
-    z_floats = AE.compressed_length(mu_pad)
-    if cc.method == "lgc_rar_q8" and tkind == "ring_q8":
-        z_payload = Q.wire_nbytes(z_floats,
-                                  cc.q8_scale_block or Q.SCALE_BLOCK)
-    else:
-        z_payload = z_floats * BYTES_F32
-
-    if cc.method in ("lgc_rar", "lgc_rar_q8"):
-        # every node sends the encoding; the rotating leader's index
-        # broadcast is shared (amortized across nodes, Section V-A)
-        b = dense_bytes + last_bytes + z_payload + idx_bytes / K
-        cr = baseline / b
-        return RateReport(cc.method, b, b, b, baseline, cr, cr, cr)
-
+    compressed payloads *really* are — see the per-op pricing rules in
+    ``repro.dist.plan``: q8 reductions cost ~1 byte/value only on
+    "ring_q8", packed sparse exchanges and the leader index set cost
+    their real packed bytes only on "ring_packed", and every float-wire
+    transport pays full f32 regardless of fake quantization.  The
+    payload is priced from the SAME ops the compressor step executes
+    (``build_plan`` for the method's steady phase)."""
+    plan = XP.build_plan(cc, layout, K, transport=transport)
+    baseline = layout.n_total * BYTES_F32
+    b_leader, b_other = XP.rate_terms(
+        plan, indices=indices, inno_indices=inno_indices,
+        count_exempt=count_exempt, deflate=deflate_bytes)
+    b_avg = (b_leader + (K - 1) * b_other) / K
     if cc.method == "lgc_ps":
-        # Shared (leader) index support: ONLY the rotating leader ships the
-        # top-k index set + the encoded common representation; every node
-        # ships its innovation values with LOCAL indices (log2(mu) bits).
-        # This is the reading under which the paper's 0.012MB-per-node /
-        # 17000x numbers close (see DESIGN.md / compressors.py).
-        k_inv = innovation_k(mu_pad,
-                             innovation_frac(cc.innovation_sparsity,
-                                             cc.sparsity))
-        if on_packed_wire:
-            inno_bytes = PK.wire_nbytes(PK.make_plan(mu_pad, k_inv, sb))
-        else:
-            inno_bytes = (k_inv * BYTES_F32
-                          + deflate_bytes(inno_indices, k_inv, mu_pad))
-        b_leader = (dense_bytes + last_bytes + z_floats * BYTES_F32
-                    + idx_bytes + inno_bytes)
-        b_other = dense_bytes + last_bytes + inno_bytes
-        b_avg = (b_leader + (K - 1) * b_other) / K
+        # the one method with a real leader/other payload asymmetry
         return RateReport(cc.method, b_avg, b_leader, b_other, baseline,
                           baseline / b_avg, baseline / b_leader,
                           baseline / b_other)
-
-    raise ValueError(cc.method)
+    # all other methods: every node sends the same payload per iteration
+    # (leader-only terms — the rotating index broadcast — are reported
+    # amortized, matching the paper's Section V-A accounting)
+    return RateReport(cc.method, b_avg, b_avg, b_avg, baseline,
+                      baseline / b_avg, baseline / b_avg, baseline / b_avg)
 
 
 def total_information_tb(bytes_per_node: float, K: int, steps: int) -> float:
@@ -199,7 +137,9 @@ def wire_payload_terms(cc: CompressionConfig, layout: GradientLayout,
     compressor step on a ring-family transport, by collective kind —
     the executable contract between the payload accounting above and the
     measured trace-time tally (asserted equal, term by term, in
-    ``tests/test_wire_accounting.py``).
+    ``tests/test_wire_accounting.py``).  The terms are
+    ``plan.wire_terms`` over the method's steady-phase op list — the
+    same objects :func:`rate_report` prices and the compressor executes.
 
     "Steady state" = the phase the method spends training in: compressed
     for the lgc methods, topk for sparse_gd/dgc, warmup-equivalent for
@@ -211,112 +151,24 @@ def wire_payload_terms(cc: CompressionConfig, layout: GradientLayout,
       * reductions pay the ring factor 2(Ka-1)/Ka per axis plus chunk
         zero-padding to a multiple of Ka, vs the rate's flat per-node
         payload;
-      * on the FLOAT wires only, the exempt-last and sparse/dgc
-        exchanges move through all_gather — (K-1)x f32 values AND raw
-        int32 indices — while the rate prices one node's DEFLATE-coded
-        send.  On the packed wire ("ring_packed") this slack is CLOSED:
-        both sides price the identical ``packed.wire_nbytes`` payload
-        (int8 values + bucket counts + bit-packed low index bits), so
-        measured and accounted sparse-exchange bytes agree by
-        construction — the rate's entropy-coded index claim made
-        structural;
-      * the leader index set ships as a raw int32 broadcast at
+      * on the FLOAT wires only, SparseExchange ops (and
+        PackedSparseExchange ops off the packed wire) move through
+        all_gather — (K-1)x f32 values AND raw int32 indices — while the
+        rate prices one node's DEFLATE-coded send.  On "ring_packed"
+        this slack is CLOSED: both pricers read the identical
+        ``PackPlan`` carried by the op (int8 values + bucket counts +
+        bit-packed low index bits), so measured and accounted
+        sparse-exchange bytes agree by construction — the rate's
+        entropy-coded index claim made structural;
+      * the IndexBroadcast op ships as a raw int32 broadcast at
         (K-1)/K·nbytes, vs the rate's deflate(idx)/K amortization — on
         the packed wire this slack too is CLOSED: both sides price the
-        identical ``packed.index_nbytes`` payload (the broadcast moves
+        op's ``packed.index_nbytes`` payload (the broadcast moves
         (K-1)/K of it, the rate amortizes the same bytes over K);
-      * the ``lgc_rar_q8`` encoding term uses the same
-        ``quantize.wire_nbytes`` (1 byte/value + one f32 scale per
+      * the ``lgc_rar_q8`` encoding term (Reduce wire="q8") uses the
+        same ``quantize.wire_nbytes`` (1 byte/value + one f32 scale per
         block) as ``rate_report(transport="ring_q8")`` — on the int8
         wire, measured and accounted bytes agree by construction.
     """
-    tkind = transport if transport is not None else cc.transport
-    assert tkind in ("ring", "ring_q8", "ring_hier", "ring_packed"), tkind
-    Ks = tuple(axis_sizes) if axis_sizes else (K,)
-    assert int(np.prod(Ks)) == K, (Ks, K)
-    sb = cc.q8_scale_block or Q.SCALE_BLOCK
-    packed_wire = (tkind == "ring_packed"
-                   and cc.method in PK.PACKED_METHODS)
-    terms: Dict[str, float] = {}
-
-    def add(kind: str, b: float) -> None:
-        if b:
-            terms[kind] = terms.get(kind, 0.0) + float(b)
-
-    def sparse_exchange(n_vec: int, k: int) -> None:
-        """One packed-path sparse exchange of k pairs over a length-n_vec
-        vector: real packed payload on ring_packed, f32 values + raw
-        int32 indices on the float wires (the exact f32 path)."""
-        if k <= 0:
-            return
-        if packed_wire:
-            add("all_gather_packed",
-                (K - 1) * PK.wire_nbytes(PK.make_plan(n_vec, k, sb)))
-        else:
-            add("all_gather", (K - 1) * k * (BYTES_F32 + BYTES_I32))
-
-    def reduce_f32(n_vals: int, itemsize: int = BYTES_F32) -> None:
-        if n_vals <= 0:
-            return
-        if tkind == "ring_hier" and len(Ks) > 1:
-            K1 = Ks[-1]
-            c = -(-n_vals // K1)
-            if K1 > 1:
-                add("ring_hier_intra", 2 * (K1 - 1) * c * itemsize)
-            for Ka in Ks[:-1]:
-                if Ka > 1:
-                    add("ring_hier_inter",
-                        2 * (Ka - 1) * (-(-c // Ka)) * itemsize)
-        else:
-            for Ka in Ks:
-                if Ka > 1:
-                    add("ring_allreduce",
-                        2 * (Ka - 1) * (-(-n_vals // Ka)) * itemsize)
-
-    def reduce_q8(n_vals: int) -> None:
-        for Ka in Ks:
-            if Ka > 1:
-                add("ring_allreduce_q8",
-                    2 * (Ka - 1) * Q.wire_nbytes(-(-n_vals // Ka), sb))
-
-    if cc.method == "none":
-        reduce_f32(layout.n_total)
-        return terms
-
-    # exempt-dense segments: reduced as a d-length f32 vector
-    reduce_f32(sum(l.size for l in layout.dense))
-    mp = layout.mu_pad
-    if cc.method in PK.PACKED_METHODS:
-        # exempt-last rides the packed sparse path for these methods
-        sparse_exchange(layout.n_total, layout.k_last)
-    elif layout.k_last:
-        # lgc_rar family: exempt-last stays a raw f32+int32 all_gather
-        add("all_gather",
-            (K - 1) * layout.k_last * (BYTES_F32 + BYTES_I32))
-
-    if cc.method in ("sparse_gd", "dgc"):
-        sparse_exchange(layout.n_total, mp)
-        return terms
-
-    # lgc family: the rotating leader's index set — a raw i32 broadcast
-    # on the float wires, the packed index payload (bucket counts +
-    # bit-packed low bits, bit-exact) on ring_packed for EVERY lgc
-    # method (the index wire carries no values, so it is method-blind)
-    if tkind == "ring_packed":
-        add("broadcast_packed", (K - 1) / K
-            * PK.index_nbytes(PK.make_plan(layout.n_total, mp, sb)))
-    else:
-        add("broadcast", (K - 1) / K * mp * BYTES_I32)
-    zl = AE.compressed_length(mp)
-    if cc.method == "lgc_ps":
-        add("broadcast", (K - 1) / K * zl * BYTES_F32)   # z_common
-        # innovations: k_inv sparse pairs with mu_pad-local indices —
-        # the SAME rounding select_innovation ships (shared helper)
-        k_inv = innovation_k(mp, innovation_frac(cc.innovation_sparsity,
-                                                 cc.sparsity))
-        sparse_exchange(mp, k_inv)
-    elif cc.method == "lgc_rar_q8" and tkind == "ring_q8":
-        reduce_q8(zl)
-    else:
-        reduce_f32(zl)
-    return terms
+    plan = XP.build_plan(cc, layout, K, transport=transport)
+    return XP.wire_terms(plan, axis_sizes=axis_sizes)

@@ -43,6 +43,7 @@ reset per phase build.
 """
 from __future__ import annotations
 
+import contextlib
 import threading
 from typing import Dict, Optional, Sequence, Union
 
@@ -63,19 +64,50 @@ def _tally_dict() -> Dict[str, float]:
     return _tally.d
 
 
+def _tally_ops() -> Dict[str, Dict[str, float]]:
+    if not hasattr(_tally, "ops"):
+        _tally.ops = {}
+    return _tally.ops
+
+
+@contextlib.contextmanager
+def wire_op(label: str):
+    """Attribute wire bytes recorded inside the block to plan op
+    ``label`` (the executor wraps each transport call in one of these,
+    which is what feeds ``wire_report(by_op=True)``)."""
+    prev = getattr(_tally, "label", None)
+    _tally.label = label
+    try:
+        yield
+    finally:
+        _tally.label = prev
+
+
 def record_wire_bytes(kind: str, nbytes: float) -> None:
     if not nbytes:          # zero-length payloads create no tally entry
         return
     d = _tally_dict()
     d[kind] = d.get(kind, 0.0) + float(nbytes)
+    label = getattr(_tally, "label", None)
+    if label is not None:
+        per_op = _tally_ops().setdefault(label, {})
+        per_op[kind] = per_op.get(kind, 0.0) + float(nbytes)
 
 
 def reset_wire_tally() -> None:
     _tally_dict().clear()
+    _tally_ops().clear()
 
 
-def wire_report() -> Dict[str, float]:
-    """Per-node wire bytes recorded since the last reset, by collective."""
+def wire_report(by_op: bool = False):
+    """Per-node wire bytes recorded since the last reset.
+
+    Default: ``{collective kind: bytes}`` (the historical report, key
+    set unchanged).  ``by_op=True``: ``{plan op label: {kind: bytes}}``
+    — only bytes recorded under :func:`wire_op` appear, so a byte
+    regression names the exchange op that drifted."""
+    if by_op:
+        return {label: dict(kinds) for label, kinds in _tally_ops().items()}
     return dict(_tally_dict())
 
 

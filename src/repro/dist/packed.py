@@ -36,10 +36,13 @@ exchange (gated in ``benchmarks/transports_bench.py``).
 
 Index roundtrip is bit-exact for any indices in ``[0, n]`` (the
 ``select_topk`` sentinel ``n`` included); values pay exactly one
-quantization, bounded by half the per-block scale.  When k is so small
-that the pack kernels' lane floor would cost more than raw int32,
-``make_plan`` falls back to shipping the sorted indices raw (values
-stay int8), so the packed wire is never worse than 4 bytes/index.
+quantization, bounded by half the per-block scale.  The pack kernels
+cost exactly ``ceil(k/32)`` words per plane (the sub-lane tail path in
+``kernels/bitpack.py`` — no 128-word lane floor), so even sub-1K-pair
+exchanges (k_inv, small k_last) get real bit-packing; ``make_plan``
+still falls back to raw sorted int32 indices for the few-index regime
+(k ≲ 8) where the bucket histogram alone outweighs 4 bytes/index, so
+the packed wire is never worse than raw.
 """
 from __future__ import annotations
 
@@ -83,12 +86,12 @@ def _index_nbytes(n: int, k: int, lo_bits: int) -> int:
 def make_plan(n: int, k: int, scale_block: int = 0) -> PackPlan:
     """Pick ``lo_bits`` minimizing the exact index payload
     (4·n_buckets + packed_nbytes(k, lo_bits)) — all quantities static,
-    so the scan runs at trace time and the optimum is exact.  When the
-    pack kernels' 128-word lane floor makes even the best packed layout
-    cost more than raw int32 indices (small k), the plan falls back to
-    shipping the sorted indices raw — the packed wire is never worse
-    than 4 bytes/index, so sub-lane exchanges (k_inv, small k_last)
-    don't pay the plane floor."""
+    so the scan runs at trace time and the optimum is exact.  Plane
+    words cost exactly ceil(k/32) each (sub-lane tail path in the
+    kernels), so packing wins down to a handful of indices; only when
+    even the best (buckets + planes) split costs more than raw int32
+    (k ≲ 8) does the plan fall back to shipping the sorted indices raw —
+    the packed wire is never worse than 4 bytes/index."""
     assert n >= 1 and k >= 1, (n, k)
     width = BP.bit_width(n)
     best = min(range(1, width + 1),

@@ -72,6 +72,7 @@ Axis = Sequence[str]
 
 @runtime_checkable
 class Transport(Protocol):
+    kind: str                  # the make_transport key — what pricing keys on
     K: int
     ae_axes: Tuple[str, ...]
 
@@ -80,11 +81,11 @@ class Transport(Protocol):
     def sum(self, x): ...
     def all_gather(self, x): ...
     def from_leader(self, x, leader): ...
-    def broadcast_packed(self, idx, leader, n: int): ...
+    def broadcast_packed(self, idx, leader, n: int, plan=None): ...
     def sparse_mean(self, vals, idx, n: int): ...
     def mean_q8(self, x): ...
-    def sparse_gather_packed(self, vals, idx, n: int): ...
-    def sparse_mean_packed(self, vals, idx, n: int): ...
+    def sparse_gather_packed(self, vals, idx, n: int, plan=None): ...
+    def sparse_mean_packed(self, vals, idx, n: int, plan=None): ...
 
 
 def _scatter(vals, idx, n):
@@ -104,6 +105,8 @@ class MeshTransport:
     node_index: Optional[jnp.ndarray] = None   # override for exotic callers
     scale_block: int = Q.SCALE_BLOCK           # int8-wire scale granularity
     interpret: bool = True                     # Pallas pack kernels on CPU
+
+    kind = "mesh"              # class attr, not a field: the pricing key
 
     def _index(self):
         if self.node_index is not None:
@@ -130,14 +133,16 @@ class MeshTransport:
             return x
         return C.broadcast(x, self.axes, self._index() == leader)
 
-    def broadcast_packed(self, idx, leader, n):
+    def broadcast_packed(self, idx, leader, n, plan=None):
         """Leader's *sorted* index set (k,) over [0, n] → all nodes.
         Here (and on every float wire) the set moves as the raw int32
         broadcast ``from_leader`` already prices; only
         RingPackedTransport re-routes it onto the packed index wire
         (bucket counts + bit-packed low bits) — which decodes bit-exact,
         so unlike the value-carrying packed exchanges this re-route
-        changes bytes only, never numerics."""
+        changes bytes only, never numerics.  ``plan`` (an exchange-plan
+        PackPlan) is the packed wire format to use; float wires ignore
+        it."""
         return self.from_leader(idx, leader)
 
     def mean_q8(self, x):
@@ -170,7 +175,7 @@ class MeshTransport:
         never touches exchanges the compressor wants exact."""
         return self._sparse_gather(vals, idx, n).mean(0)
 
-    def sparse_gather_packed(self, vals, idx, n):
+    def sparse_gather_packed(self, vals, idx, n, plan=None):
         """Per-node dense scatters (K, n) of sparse pairs whose *wire
         representation* is packed (bit-packed indices + int8 values) on
         the packed transport.  Here the wire is f32 values + raw int32
@@ -181,9 +186,9 @@ class MeshTransport:
         everywhere else."""
         return self._sparse_gather(vals, idx, n)
 
-    def sparse_mean_packed(self, vals, idx, n):
+    def sparse_mean_packed(self, vals, idx, n, plan=None):
         """sparse_mean over the packed wire representation."""
-        return self.sparse_gather_packed(vals, idx, n).mean(0)
+        return self.sparse_gather_packed(vals, idx, n, plan=plan).mean(0)
 
 
 @dataclass(frozen=True)
@@ -192,6 +197,8 @@ class RingTransport(MeshTransport):
     explicit chunked ring in repro.dist.collectives (chained per-axis
     rings on multi-axis dp meshes) and the leader exchange through the
     explicit ppermute-forwarding broadcast."""
+
+    kind = "ring"
 
     def mean(self, x):
         return C.ring_allreduce_multi(x, self.axes, op="mean") \
@@ -216,6 +223,8 @@ class RingQ8Transport(RingTransport):
     all_gather — stays f32, matching rate.py, which only prices the
     encoding reduction at ~1 byte/value."""
 
+    kind = "ring_q8"
+
     def mean_q8(self, x):
         if not self.axes:
             return Q.fake_quantize(x, self.scale_block)
@@ -234,6 +243,8 @@ class RingHierTransport(RingTransport):
     axis this degenerates to exactly RingTransport's schedule."""
     intra_chunk: Optional[int] = None
     inter_chunk: Optional[int] = None
+
+    kind = "ring_hier"
 
     def mean(self, x):
         return C.hierarchical_ring_allreduce(
@@ -264,10 +275,17 @@ class RingPackedTransport(RingTransport):
     all_gathers stay f32, matching rate.py, which re-prices exactly the
     packed exchanges on this wire."""
 
-    def sparse_gather_packed(self, vals, idx, n):
+    kind = "ring_packed"
+
+    def sparse_gather_packed(self, vals, idx, n, plan=None):
         if not self.axes or vals.shape[0] == 0:
             return super().sparse_gather_packed(vals, idx, n)
-        plan = PK.make_plan(n, vals.shape[0], self.scale_block)
+        if plan is None:
+            plan = PK.make_plan(n, vals.shape[0], self.scale_block)
+        # an exchange-plan-supplied format must describe THIS exchange —
+        # the same (n, k) the pricers priced
+        assert plan.n == n and plan.k == vals.shape[0], (plan, n,
+                                                         vals.shape)
         payload = PK.encode_sparse(vals, idx, plan,
                                    interpret=self.interpret)
         gathered = C.all_gather_packed(payload, self.axes)
@@ -278,7 +296,7 @@ class RingPackedTransport(RingTransport):
             outs.append(_scatter(vj.astype(vals.dtype), ij, n))
         return jnp.stack(outs)
 
-    def broadcast_packed(self, idx, leader, n):
+    def broadcast_packed(self, idx, leader, n, plan=None):
         """The leader index set over the REAL packed index wire: encode
         the (sorted) set through ``packed.encode_indices`` (high bits as
         a bucket histogram, low bits through the bit-plane kernel),
@@ -291,7 +309,9 @@ class RingPackedTransport(RingTransport):
         adopted."""
         if not self.axes or idx.shape[0] == 0:
             return self.from_leader(idx, leader)
-        plan = PK.make_plan(n, idx.shape[0], self.scale_block)
+        if plan is None:
+            plan = PK.make_plan(n, idx.shape[0], self.scale_block)
+        assert plan.n == n and plan.k == idx.shape[0], (plan, n, idx.shape)
         payload = PK.encode_indices(idx, plan, interpret=self.interpret)
         got = C.ring_broadcast_packed(payload, self.axes,
                                       self._index() == leader)
@@ -309,6 +329,8 @@ class SimTransport:
     scale_block: int = Q.SCALE_BLOCK
     interpret: bool = True
 
+    kind = "sim"
+
     def pernode(self, fn, in_axes=0):
         return jax.vmap(fn, in_axes=in_axes)
 
@@ -324,7 +346,7 @@ class SimTransport:
     def from_leader(self, x, leader):
         return jax.lax.dynamic_index_in_dim(x, leader, 0, keepdims=False)
 
-    def broadcast_packed(self, idx, leader, n):
+    def broadcast_packed(self, idx, leader, n, plan=None):
         """Wire-free emulation: the leader row, untouched — the exact
         oracle the packed index wire must match bit-for-bit."""
         return self.from_leader(idx, leader)
@@ -343,15 +365,15 @@ class SimTransport:
     def sparse_mean(self, vals, idx, n):
         return self._sparse_gather(vals, idx, n).mean(0)
 
-    def sparse_gather_packed(self, vals, idx, n):
+    def sparse_gather_packed(self, vals, idx, n, plan=None):
         """The exact oracle: per-node scatter of the untouched pairs.
         RingPackedTransport must match it with bit-exact indices and
         values within the documented q8 bound (its single value
         quantization) — asserted by the transport gate."""
         return self._sparse_gather(vals, idx, n)
 
-    def sparse_mean_packed(self, vals, idx, n):
-        return self.sparse_gather_packed(vals, idx, n).mean(0)
+    def sparse_mean_packed(self, vals, idx, n, plan=None):
+        return self.sparse_gather_packed(vals, idx, n, plan=plan).mean(0)
 
 
 # ===========================================================================

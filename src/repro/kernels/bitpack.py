@@ -16,10 +16,15 @@ the measured tally.  These kernels close that gap structurally with a
           << b``.
 
 The packed representation of k values at width b is ``b`` planes of
-``ceil(k/32)`` int32 words (lane-padded to 128), i.e. ~``b`` bits per
-value + padding — this IS the wire payload the packed transports
-ppermute, and :func:`packed_nbytes` is the single accounting source of
-truth shared by the trace-time tally and ``repro.core.rate``.
+exactly ``ceil(k/32)`` int32 words, i.e. ~``b`` bits per value — this IS
+the wire payload the packed transports ppermute, and
+:func:`packed_nbytes` is the single accounting source of truth shared by
+the trace-time tally and ``repro.core.rate``.  Full (GROUP, LANE) tiles
+go through the Pallas kernels; the sub-lane tail columns (< 128 words —
+the *whole* payload for small-k exchanges like the PS innovations) take
+an identical-semantics jnp path, so small exchanges pay ``ceil(k/32)``
+words instead of the old 128-word lane floor that used to force
+``make_plan`` into its raw-int32 fallback.
 
 Exactness contract: for any values in ``[0, 2**width)`` the roundtrip
 ``unpack(pack(x, width), k) == x`` is bit-exact (property-tested over
@@ -51,9 +56,10 @@ def bit_width(n: int) -> int:
 
 
 def word_count(k: int) -> int:
-    """int32 words per bit-plane for ``k`` values: ceil(k/GROUP),
-    lane-padded to a multiple of LANE (the tile the kernels sweep)."""
-    return -(-max(int(k), 1) // GROUP // LANE) * LANE
+    """int32 words per bit-plane for ``k`` values: exactly ceil(k/GROUP).
+    No lane padding — the wire ships only real words; the kernels sweep
+    the full-LANE prefix and a jnp path handles the sub-lane tail."""
+    return -(-max(int(k), 1) // GROUP)
 
 
 def packed_nbytes(k: int, width: int) -> int:
@@ -84,12 +90,32 @@ def _unpack_kernel(w_ref, out_ref, *, width: int):
     out_ref[...] = acc
 
 
+def _pack_tail(x: jnp.ndarray, width: int) -> jnp.ndarray:
+    """jnp mirror of :func:`_pack_kernel` for < LANE columns: ``x``
+    (GROUP, Wt) int32 -> (width, Wt) planes, same shift/mask/weighted-sum
+    semantics bit for bit."""
+    r = jnp.arange(GROUP, dtype=jnp.int32)[:, None]
+    return jnp.stack([jnp.sum(((x >> b) & 1) << r, axis=0)
+                      for b in range(width)])
+
+
+def _unpack_tail(w: jnp.ndarray, width: int) -> jnp.ndarray:
+    """jnp mirror of :func:`_unpack_kernel`: (width, Wt) -> (GROUP, Wt)."""
+    r = jnp.arange(GROUP, dtype=jnp.int32)[:, None]
+    acc = jnp.zeros((GROUP, w.shape[1]), jnp.int32)
+    for b in range(width):
+        acc = acc | (((w[b][None, :] >> r) & 1) << b)
+    return acc
+
+
 @functools.partial(jax.jit, static_argnames=("width", "interpret"))
 def pack_bits(x: jnp.ndarray, width: int, interpret: bool = True
               ) -> jnp.ndarray:
     """Pack ``x``: (k,) int32 values in ``[0, 2**width)`` into a
     (width, word_count(k)) int32 bit-plane array.  Values beyond the
     width are truncated (callers pick ``width = bit_width(max value)``).
+    Full-LANE columns run through the Pallas kernel; the sub-lane tail
+    (possibly the whole array, for small k) through the jnp mirror.
     """
     assert 1 <= width <= MAX_WIDTH, width
     k = x.shape[0]
@@ -98,15 +124,22 @@ def pack_bits(x: jnp.ndarray, width: int, interpret: bool = True
     flat = jnp.concatenate([x.astype(jnp.int32),
                             jnp.zeros((pad,), jnp.int32)]) if pad else \
         x.astype(jnp.int32)
-    kern = functools.partial(_pack_kernel, width=width)
-    return pl.pallas_call(
-        kern,
-        grid=(W // LANE,),
-        in_specs=[pl.BlockSpec((GROUP, LANE), lambda i: (0, i))],
-        out_specs=pl.BlockSpec((width, LANE), lambda i: (0, i)),
-        out_shape=jax.ShapeDtypeStruct((width, W), jnp.int32),
-        interpret=interpret,
-    )(flat.reshape(GROUP, W))
+    cols = flat.reshape(GROUP, W)
+    W_main = (W // LANE) * LANE
+    parts = []
+    if W_main:
+        kern = functools.partial(_pack_kernel, width=width)
+        parts.append(pl.pallas_call(
+            kern,
+            grid=(W_main // LANE,),
+            in_specs=[pl.BlockSpec((GROUP, LANE), lambda i: (0, i))],
+            out_specs=pl.BlockSpec((width, LANE), lambda i: (0, i)),
+            out_shape=jax.ShapeDtypeStruct((width, W_main), jnp.int32),
+            interpret=interpret,
+        )(cols[:, :W_main]))
+    if W > W_main:
+        parts.append(_pack_tail(cols[:, W_main:], width))
+    return parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=1)
 
 
 @functools.partial(jax.jit, static_argnames=("k", "interpret"))
@@ -116,14 +149,20 @@ def unpack_bits(words: jnp.ndarray, k: int, interpret: bool = True
     first ``k`` original values, bit-exact."""
     width, W = words.shape
     assert 1 <= width <= MAX_WIDTH, width
-    assert W % LANE == 0 and GROUP * W >= k, (W, k)
-    kern = functools.partial(_unpack_kernel, width=width)
-    out = pl.pallas_call(
-        kern,
-        grid=(W // LANE,),
-        in_specs=[pl.BlockSpec((width, LANE), lambda i: (0, i))],
-        out_specs=pl.BlockSpec((GROUP, LANE), lambda i: (0, i)),
-        out_shape=jax.ShapeDtypeStruct((GROUP, W), jnp.int32),
-        interpret=interpret,
-    )(words)
+    assert GROUP * W >= k, (W, k)
+    W_main = (W // LANE) * LANE
+    parts = []
+    if W_main:
+        kern = functools.partial(_unpack_kernel, width=width)
+        parts.append(pl.pallas_call(
+            kern,
+            grid=(W_main // LANE,),
+            in_specs=[pl.BlockSpec((width, LANE), lambda i: (0, i))],
+            out_specs=pl.BlockSpec((GROUP, LANE), lambda i: (0, i)),
+            out_shape=jax.ShapeDtypeStruct((GROUP, W_main), jnp.int32),
+            interpret=interpret,
+        )(words[:, :W_main]))
+    if W > W_main:
+        parts.append(_unpack_tail(words[:, W_main:], width))
+    out = parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=1)
     return out.reshape(-1)[:k]

@@ -61,10 +61,14 @@ def test_bit_width_covers_sentinel():
 
 
 def test_word_count_and_nbytes():
-    assert BP.word_count(1) == BP.LANE                  # lane-padded floor
+    # exact ceil(k/32): no lane floor — sub-lane tails take the jnp path
+    assert BP.word_count(1) == 1
+    assert BP.word_count(32) == 1
+    assert BP.word_count(33) == 2
     assert BP.word_count(32 * 128) == 128
-    assert BP.word_count(32 * 128 + 1) == 256
+    assert BP.word_count(32 * 128 + 1) == 129
     assert BP.packed_nbytes(4096, 12) == 12 * 128 * 4
+    assert BP.packed_nbytes(40, 12) == 12 * 2 * 4
 
 
 # ---------------------------------------------------------------------------
@@ -147,13 +151,35 @@ def test_wire_nbytes_is_sum_of_parts():
         + BP.packed_nbytes(plan.k, plan.lo_bits)
 
 
-def test_small_k_raw_index_fallback():
-    """Below the pack kernels' lane floor the plan ships sorted raw
-    int32 indices instead: the packed wire never pays more than 4
-    bytes/index, and the payload still roundtrips through the same
-    encode/decode (indices exact, values through one quantization)."""
+def test_small_k_gets_real_packing():
+    """With the sub-lane tail path there is no 128-word lane floor:
+    exchanges that used to hit the raw-int32 fallback (k of a few dozen)
+    now get real bit-packing, cost no more than raw, and still roundtrip
+    exactly."""
     rng = np.random.default_rng(3)
-    for n, k in ((10**6, 40), (9280, 16), (1000, 50)):
+    for n, k in ((10**6, 40), (9280, 16), (1000, 50), (416, 42)):
+        plan = PK.make_plan(n, k, 256)
+        assert not plan.raw_index, (n, k)
+        assert PK.index_nbytes(plan) <= 4 * k, (n, k)
+        idx = jnp.asarray(rng.choice(n, size=k, replace=False)
+                          .astype(np.int32))
+        vals = jnp.asarray(rng.normal(size=k).astype(np.float32))
+        payload = PK.encode_sparse(vals, idx, plan)
+        assert len(payload) == 4          # counts, words, q, scales
+        assert sum(int(np.asarray(p).nbytes) for p in payload) \
+            == PK.wire_nbytes(plan)
+        dv, di = PK.decode_sparse(payload, plan)
+        np.testing.assert_array_equal(np.asarray(di), np.sort(idx))
+        fv, fi = PK.fake_roundtrip(vals, idx, 256)
+        np.testing.assert_array_equal(np.asarray(fv), np.asarray(dv))
+
+
+def test_tiny_k_raw_index_fallback():
+    """Only the few-index regime (k small enough that the bucket
+    histogram alone outweighs raw int32) still falls back to sorted raw
+    indices — the packed wire is never worse than 4 bytes/index."""
+    rng = np.random.default_rng(4)
+    for n, k in ((10**6, 5), (9280, 2), (1000, 3)):
         plan = PK.make_plan(n, k, 256)
         assert plan.raw_index, (n, k)
         assert PK.index_nbytes(plan) == 4 * k

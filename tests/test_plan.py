@@ -1,0 +1,409 @@
+"""The exchange-plan IR (dist/plan.py): compiler structure, executor
+feed contract, pricer equivalence, and the per-op wire trace.
+
+This is the regression net for the "one op list drives everything"
+invariant: build_plan's op sequence per (method, phase) is asserted
+structurally; rate_terms/wire_terms are checked against independently
+hand-written copies of the legacy pricing formulas; and a subprocess
+test lowers real distributed steps and asserts the trace-time tally's
+per-op breakdown (``wire_report(by_op=True)``) equals the plan pricer's
+``wire_terms_by_op`` label by label, term by term — including a 2-axis
+pod mesh.  If the step ships an exchange the plan doesn't know about
+(or vice versa) the executor's feed assert or this file fails.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import CompressionConfig
+from repro.core import autoencoder as AE
+from repro.core import build_compressor
+from repro.core.phases import PHASE_COMPRESSED, PHASE_TOPK_AE, PHASE_WARMUP
+from repro.core.rate import deflate_bytes, rate_report
+from repro.core.sparsify import innovation_frac, innovation_k
+from repro.dist import packed as PK
+from repro.dist import plan as XP
+from repro.dist import quantize as Q
+from repro.dist.transport import SimTransport
+
+K = 4
+RING_TRANSPORTS = ("ring", "ring_q8", "ring_hier", "ring_packed")
+
+
+def _cc(method, transport="ring", **kw):
+    kw.setdefault("sparsity", 0.05)
+    kw.setdefault("innovation_sparsity", 0.005)
+    kw.setdefault("warmup_steps", 1)
+    kw.setdefault("ae_train_steps", 2)
+    return CompressionConfig(method=method, transport=transport, **kw)
+
+
+@pytest.fixture(scope="module")
+def layout():
+    params = {"embed": {"w": jnp.zeros((32, 16))},
+              "layer1": {"w": jnp.zeros((64, 64)), "b": jnp.zeros((64,))},
+              "layer2": {"w": jnp.zeros((64, 64))},
+              "lm_head": {"w": jnp.zeros((16, 32))}}
+    return build_compressor(_cc("dgc"), params, K).layout
+
+
+# ---------------------------------------------------------------------------
+# compiler: the op list per (method, phase)
+
+
+def test_steady_phase_mapping():
+    assert XP.steady_phase("none") == PHASE_WARMUP
+    for m in ("sparse_gd", "dgc"):
+        assert XP.steady_phase(m) == PHASE_TOPK_AE
+    for m in ("lgc_ps", "lgc_rar", "lgc_rar_q8"):
+        assert XP.steady_phase(m) == PHASE_COMPRESSED
+
+
+def test_warmup_plan_is_one_dense_reduce(layout):
+    for method in XP.METHODS:
+        plan = XP.build_plan(_cc(method), layout, K, phase=PHASE_WARMUP)
+        assert plan.labels == ("grad",)
+        op = plan.op("grad")
+        assert isinstance(op, XP.DenseReduce) and not op.exempt
+        assert op.n_vals == layout.n_total
+
+
+def test_topk_plan_structure(layout):
+    n, sb = layout.n_total, Q.SCALE_BLOCK
+    for method in ("sparse_gd", "dgc"):
+        plan = XP.build_plan(_cc(method), layout, K)
+        assert plan.phase == PHASE_TOPK_AE
+        assert plan.labels == ("exempt_dense", "exempt_last", "topk")
+        dense = plan.op("exempt_dense")
+        assert isinstance(dense, XP.DenseReduce) and dense.exempt
+        assert dense.n_vals == sum(l.size for l in layout.dense)
+        # both are packed methods: the ops carry THE PackPlan
+        for label, k, k_rate in (("exempt_last", layout.k_last,
+                                  layout.k_last),
+                                 ("topk", layout.mu_pad, layout.mu)):
+            op = plan.op(label)
+            assert isinstance(op, XP.PackedSparseExchange)
+            assert (op.n_vec, op.k, op.k_rate) == (n, k, k_rate)
+            assert op.mode == "mean"
+            assert op.pack == PK.make_plan(n, k, sb)
+
+
+def test_lgc_compressed_plan_structure(layout):
+    n, mp, sb = layout.n_total, layout.mu_pad, Q.SCALE_BLOCK
+    zl = AE.compressed_length(mp)
+
+    for method, wire in (("lgc_rar", "f32"), ("lgc_rar_q8", "q8")):
+        plan = XP.build_plan(_cc(method), layout, K)
+        assert plan.labels == ("exempt_dense", "exempt_last", "support",
+                               "encoding")
+        # rar is NOT a packed method: exact sparse exchange for the last
+        # layer, but the support broadcast is packable (method-blind)
+        assert isinstance(plan.op("exempt_last"), XP.SparseExchange)
+        sup = plan.op("support")
+        assert isinstance(sup, XP.IndexBroadcast)
+        assert (sup.n_vec, sup.k, sup.k_rate) == (n, mp, layout.mu)
+        assert sup.pack == PK.make_plan(n, mp, sb)
+        enc = plan.op("encoding")
+        assert isinstance(enc, XP.Reduce)
+        assert (enc.n_vals, enc.wire) == (zl, wire)
+
+    plan = XP.build_plan(_cc("lgc_ps"), layout, K)
+    assert plan.labels == ("exempt_dense", "exempt_last", "support",
+                           "z_common", "innovations")
+    assert isinstance(plan.op("exempt_last"), XP.PackedSparseExchange)
+    assert plan.op("z_common").n_vals == zl
+    inno = plan.op("innovations")
+    k_inv = innovation_k(mp, innovation_frac(0.005, 0.05))
+    assert isinstance(inno, XP.PackedSparseExchange)
+    assert inno.mode == "gather"
+    assert (inno.n_vec, inno.k, inno.k_rate) == (mp, k_inv, k_inv)
+    assert inno.pack == PK.make_plan(mp, k_inv, sb)
+
+
+def test_lgc_topk_ae_plan_structure(layout):
+    mp = layout.mu_pad
+    plan = XP.build_plan(_cc("lgc_rar"), layout, K, phase=PHASE_TOPK_AE)
+    assert plan.labels == ("exempt_dense", "exempt_last", "support",
+                           "support_vals", "gather_vals")
+    assert isinstance(plan.op("support_vals"), XP.Reduce)
+    assert plan.op("support_vals").n_vals == mp
+    assert plan.op("gather_vals").n_vals == mp
+
+    plan = XP.build_plan(_cc("lgc_ps"), layout, K, phase=PHASE_TOPK_AE)
+    assert plan.labels[-1] == "gather_inno"
+    assert plan.op("gather_inno").n_vals == mp
+
+
+def test_plan_op_list_is_transport_independent(layout):
+    """The transport-equivalence contract at the IR level: every
+    substrate executes the SAME exchanges — only the pricing differs."""
+    for method in XP.METHODS:
+        plans = [XP.build_plan(_cc(method, t), layout, K)
+                 for t in ("mesh", "sim") + RING_TRANSPORTS]
+        for p in plans[1:]:
+            assert p.ops == plans[0].ops, method
+
+
+# ---------------------------------------------------------------------------
+# executor: the feed contract
+
+
+def test_execute_rejects_missing_and_unplanned_feeds(layout):
+    plan = XP.build_plan(_cc("dgc"), layout, K)
+    feeds = {l: (lambda env: None) for l in plan.labels}
+    with pytest.raises(AssertionError, match="missing feeds"):
+        XP.execute(plan, None, {k: v for k, v in feeds.items()
+                                if k != "topk"})
+    with pytest.raises(AssertionError, match="unplanned feeds"):
+        XP.execute(plan, None, {**feeds, "rogue": lambda env: None})
+
+
+def test_execute_runs_ops_in_order_and_fills_env(layout):
+    """A real (sim-transport) execution of the warmup plan, plus env
+    chaining: a later feed sees the earlier op's result."""
+    t = SimTransport(K=K)
+    n = layout.n_total
+    g = jnp.arange(K * n, dtype=jnp.float32).reshape(K, n)
+    plan = XP.build_plan(_cc("none"), layout, K, transport="sim",
+                         phase=PHASE_WARMUP)
+    env = XP.execute(plan, t, {"grad": lambda env: g})
+    np.testing.assert_allclose(np.asarray(env["grad"]),
+                               np.asarray(jnp.mean(g, 0)), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# rate pricer: the op walk reproduces the legacy hand-written formulas
+
+
+def _legacy_rate(method, layout, transport, count_exempt=True):
+    """Frozen copy of the pre-IR rate if-ladder (what rate.py used to
+    hand-compute per method) — the equivalence oracle."""
+    n, mp, sb = layout.n_total, layout.mu_pad, Q.SCALE_BLOCK
+    packed = transport == "ring_packed"
+    dense = sum(l.size for l in layout.dense) * 4 if count_exempt else 0.0
+
+    def sparse(n_vec, k_ship, k_cnt, packable):
+        if packed and packable:
+            return float(PK.wire_nbytes(PK.make_plan(n_vec, k_ship, sb)))
+        return k_cnt * 4 + deflate_bytes(None, k_cnt, n_vec)
+
+    is_pk = method in PK.PACKED_METHODS
+    last = sparse(n, layout.k_last, layout.k_last, is_pk)
+    if method == "none":
+        return (n * 4.0,) * 2
+    if method in ("sparse_gd", "dgc"):
+        b = dense + last + sparse(n, mp, layout.mu, is_pk)
+        return b, b
+    # lgc family: the support index set is packed method-blind
+    if packed:
+        support = float(PK.index_nbytes(PK.make_plan(n, mp, sb)))
+    else:
+        support = float(deflate_bytes(None, layout.mu, n))
+    zl = AE.compressed_length(mp)
+    if method == "lgc_ps":
+        k_inv = innovation_k(mp, innovation_frac(0.005, 0.05))
+        inno = sparse(mp, k_inv, k_inv, True)
+        other = dense + last + inno
+        return other + support + zl * 4, other
+    enc = Q.wire_nbytes(zl, sb) if (method == "lgc_rar_q8"
+                                    and transport == "ring_q8") else zl * 4
+    b = dense + last + enc
+    return b + support, b
+
+
+@pytest.mark.parametrize("transport", ("mesh",) + RING_TRANSPORTS)
+def test_rate_terms_match_legacy_formulas(layout, transport):
+    for method in XP.METHODS:
+        for count_exempt in (True, False):
+            plan = XP.build_plan(_cc(method, transport), layout, K)
+            got = XP.rate_terms(plan, count_exempt=count_exempt)
+            want = _legacy_rate(method, layout, transport, count_exempt)
+            assert got == pytest.approx(want), (method, transport,
+                                                count_exempt, got, want)
+            # and through the public report: avg = (L + (K-1)*O)/K
+            r = rate_report(_cc(method, transport), layout, K,
+                            count_exempt=count_exempt)
+            avg = (want[0] + (K - 1) * want[1]) / K
+            assert r.bytes_per_node == pytest.approx(avg)
+            if method == "lgc_ps":
+                assert r.bytes_leader == pytest.approx(want[0])
+                assert r.bytes_other == pytest.approx(want[1])
+            else:
+                assert r.bytes_leader == r.bytes_other == r.bytes_per_node
+
+
+def test_rate_terms_exact_deflate_uses_supplied_indices(layout):
+    rng = np.random.default_rng(0)
+    idx = np.sort(rng.choice(layout.n_total, size=layout.mu,
+                             replace=False)).astype(np.int32)
+    plan = XP.build_plan(_cc("dgc", "ring"), layout, K)
+    est_l, _ = XP.rate_terms(plan)
+    exact_l, exact_o = XP.rate_terms(plan, indices=idx)
+    assert exact_l == exact_o
+    assert exact_l != est_l          # the exact DEFLATE size took over
+    assert exact_l - (layout.mu * 4 + layout.k_last * 4
+                      + deflate_bytes(None, layout.k_last, layout.n_total)
+                      + sum(l.size for l in layout.dense) * 4) \
+        == deflate_bytes(idx, layout.mu, layout.n_total)
+
+
+# ---------------------------------------------------------------------------
+# wire pricer: by-op decomposition and the multi-axis reduce split
+
+
+@pytest.mark.parametrize("transport", RING_TRANSPORTS)
+def test_wire_terms_by_op_aggregates_exactly(layout, transport):
+    for method in XP.METHODS:
+        plan = XP.build_plan(_cc(method, transport), layout, K)
+        by_op = XP.wire_terms_by_op(plan)
+        total = XP.wire_terms(plan)
+        assert set(by_op) <= set(plan.labels)
+        agg = {}
+        for terms in by_op.values():
+            for kind, b in terms.items():
+                agg[kind] = agg.get(kind, 0.0) + b
+        assert agg == pytest.approx(total), (method, transport)
+        # no empty term dicts survive (matches the tally's sparseness)
+        assert all(terms for terms in by_op.values())
+
+
+def test_wire_terms_hier_two_axis_split(layout):
+    """ring_hier on a (2, 2) pod mesh: every reduction splits into the
+    full-length intra ring + the 1/K1-length inter ring, and the op-level
+    breakdown prices each reduce of the plan that way."""
+    plan = XP.build_plan(_cc("lgc_rar", "ring_hier"), layout, K)
+    by_op = XP.wire_terms_by_op(plan, axis_sizes=(2, 2))
+
+    def hier(n_vals):
+        c = -(-n_vals // 2)
+        return {"ring_hier_intra": 2 * 1 * c * 4,
+                "ring_hier_inter": 2 * 1 * (-(-c // 2)) * 4}
+
+    nd = sum(l.size for l in layout.dense)
+    assert by_op["exempt_dense"] == pytest.approx(hier(nd))
+    zl = AE.compressed_length(layout.mu_pad)
+    assert by_op["encoding"] == pytest.approx(hier(zl))
+    # single-axis (K,) degenerates to the plain ring schedule
+    flat = XP.wire_terms_by_op(plan, axis_sizes=(K,))
+    assert set(flat["exempt_dense"]) == {"ring_allreduce"}
+
+
+def test_wire_ctx_rejects_bad_transport_and_axes(layout):
+    plan = XP.build_plan(_cc("dgc", "ring"), layout, K)
+    with pytest.raises(AssertionError):
+        XP.wire_terms(plan, transport="mesh")
+    with pytest.raises(AssertionError):
+        XP.wire_terms(plan, axis_sizes=(2, 3))
+
+
+# ---------------------------------------------------------------------------
+# the per-op wire trace: measured tally by op label == plan pricer
+
+
+def test_wire_report_by_op_matches_plan_pricer(subproc):
+    """Lower one steady-state distributed step per (method x transport)
+    and assert ``collectives.wire_report(by_op=True)`` — the trace-time
+    tally attributed through ``wire_op(label)`` by the ONE executor —
+    equals ``plan.wire_terms_by_op`` label by label, kind by kind.
+    Includes a 2-axis (2, 2) hierarchical case.  This is the per-op
+    refinement of test_wire_accounting's aggregate contract: it pins
+    WHICH exchange moved the bytes, not just the per-kind totals."""
+    out = subproc("""
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P
+from repro.configs.base import CompressionConfig
+from repro.core import build_compressor
+from repro.core.phases import PHASE_COMPRESSED, PHASE_TOPK_AE, PHASE_WARMUP
+from repro.dist import collectives as C
+from repro.dist import plan as XP
+
+params = {"embed": {"w": jnp.zeros((32, 16))},
+          "layer1": {"w": jnp.zeros((64, 64)), "b": jnp.zeros((64,))},
+          "lm_head": {"w": jnp.zeros((16, 32))}}
+K = 4
+
+def trace_one(method, transport, mesh_shape, axis_names):
+    cc = CompressionConfig(method=method, sparsity=0.05,
+                           innovation_sparsity=0.005, warmup_steps=1,
+                           ae_train_steps=2, transport=transport)
+    comp = build_compressor(cc, params, K)
+    n = comp.layout.n_total
+    base = comp.init_state(jax.random.PRNGKey(0))
+    ae_keys = tuple(k for k in ("ae", "ae_mom") if k in base)
+    phase = XP.steady_phase(method)
+    mesh = jax.make_mesh(mesh_shape, axis_names,
+                         axis_types=(jax.sharding.AxisType.Auto,)
+                         * len(mesh_shape))
+    lead = (0,) * len(mesh_shape)
+
+    def inner(uv, ae_part, g):
+        state = {"u": uv["u"][lead], "v": uv["v"][lead], **ae_part}
+        gg, ns, _ = comp.dist_step(state, g[lead], jnp.asarray(3),
+                                   phase, axis_names)
+        pad = (None,) * len(mesh_shape)
+        return (gg, {"u": ns["u"][pad], "v": ns["v"][pad]},
+                {k: ns[k] for k in ae_keys})
+
+    spec = P(*axis_names)
+    f = jax.jit(jax.shard_map(
+        inner, mesh=mesh,
+        in_specs=({"u": spec, "v": spec}, P(), spec),
+        out_specs=(P(), {"u": spec, "v": spec}, P()),
+        axis_names=set(axis_names), check_vma=False))
+    sds = jax.ShapeDtypeStruct
+    gshape = mesh_shape + (n,)
+    uv_s = {"u": sds(gshape, "float32"), "v": sds(gshape, "float32")}
+    ae_s = jax.tree_util.tree_map(lambda a: sds(a.shape, a.dtype),
+                                  {k: base[k] for k in ae_keys})
+    C.reset_wire_tally()
+    f.lower(uv_s, ae_s, sds(gshape, "float32"))
+    plan = XP.build_plan(cc, comp.layout, K, phase=phase)
+    return C.wire_report(by_op=True), XP.wire_terms_by_op(
+        plan, axis_sizes=mesh_shape if len(mesh_shape) > 1 else None)
+
+def check(measured, priced, ctx):
+    assert set(measured) == set(priced), (ctx, measured, priced)
+    for label in priced:
+        assert set(measured[label]) == set(priced[label]), (ctx, label)
+        for kind in priced[label]:
+            assert np.isclose(measured[label][kind], priced[label][kind],
+                              rtol=1e-9), (ctx, label, kind,
+                                           measured[label][kind],
+                                           priced[label][kind])
+
+for method in ["none", "sparse_gd", "dgc", "lgc_rar", "lgc_rar_q8",
+               "lgc_ps"]:
+    for transport in ("ring", "ring_q8", "ring_packed"):
+        m, p = trace_one(method, transport, (K,), ("data",))
+        check(m, p, (method, transport))
+
+# the 2-axis pod mesh: per-op intra/inter split of every reduction
+for method in ("lgc_rar", "lgc_ps"):
+    m, p = trace_one(method, "ring_hier", (2, 2), ("pod", "data"))
+    check(m, p, (method, "ring_hier(2,2)"))
+print("PASS")
+""", devices=4, timeout=1800)
+    assert "PASS" in out
+
+
+def test_wire_op_tally_nests_and_resets():
+    """Host-level contract of the label attribution: bytes recorded
+    under wire_op(label) land in the by-op report under that label AND
+    in the by-kind aggregate; reset clears both."""
+    from repro.dist import collectives as C
+    C.reset_wire_tally()
+    with C.wire_op("alpha"):
+        C.record_wire_bytes("ring_allreduce", 100)
+        with C.wire_op("beta"):
+            C.record_wire_bytes("broadcast", 7)
+        C.record_wire_bytes("ring_allreduce", 20)
+    C.record_wire_bytes("all_gather", 5)     # unlabeled: by-kind only
+    assert C.wire_report() == {"ring_allreduce": 120, "broadcast": 7,
+                               "all_gather": 5}
+    assert C.wire_report(by_op=True) == {
+        "alpha": {"ring_allreduce": 120},
+        "beta": {"broadcast": 7}}
+    C.reset_wire_tally()
+    assert C.wire_report() == {}
+    assert C.wire_report(by_op=True) == {}
