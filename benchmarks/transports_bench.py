@@ -83,6 +83,40 @@ def sim_latency_rows():
             f"mu_pad={comp.layout.mu_pad}")
 
 
+def guard_overhead_rows():
+    """Guarded vs unguarded execution on the sim substrate: the same
+    steady-state step with ``guard=off`` (the historical zero-cost path)
+    vs ``guard=scrub`` + payload checksum (finite-value scrub per op,
+    packed structural validation, per-op fault counters threaded into
+    the step stats).  No faults are injected — this row prices the
+    clean-path toll the guard charges EVERY step, the number DESIGN.md
+    "Faults on the wire" quotes for the off-by-default decision."""
+    for method in ("dgc", "lgc_rar_q8"):
+        base_us = None
+        for guard in ("off", "scrub"):
+            cc = CompressionConfig(method=method, sparsity=0.01,
+                                   innovation_sparsity=0.001,
+                                   warmup_steps=0, ae_train_steps=1,
+                                   guard=guard,
+                                   guard_checksum=(guard != "off"))
+            comp = build_compressor(cc, PARAMS, K)
+            states = comp.init_sim_states(jax.random.PRNGKey(0))
+            g = jax.random.normal(jax.random.PRNGKey(1),
+                                  (K, comp.layout.n_total)) * 0.01
+            phase = PHASE_COMPRESSED if method.startswith("lgc") \
+                else PHASE_TOPK_AE
+            _, states, _ = comp.sim_step(states, g, 0, PHASE_TOPK_AE)
+            step_fn = jax.jit(comp.sim_step, static_argnums=(3,))
+            us = time_call(lambda: step_fn(states, g, 1, phase))
+            if guard == "off":
+                base_us = us
+                row(f"transports/guard_off_{method}", us, "baseline")
+            else:
+                row(f"transports/guard_scrub_{method}", us,
+                    f"{us / base_us:.2f}x of unguarded (scrub + "
+                    "checksum + per-op fault tally)")
+
+
 def _traced_subprocess(code: str, devices: int) -> str:
     """Run a tracing snippet under a forced fake-device count (must be
     set before jax first initializes, hence the subprocess) and return
@@ -354,6 +388,7 @@ print("GATE-PASS")
 
 def main():
     sim_latency_rows()
+    guard_overhead_rows()
     ring_wire_row()
     packed_wire_row()
     plan_trace_rows()

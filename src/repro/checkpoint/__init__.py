@@ -1,1 +1,2 @@
-from repro.checkpoint.checkpoint import load_checkpoint, save_checkpoint
+from repro.checkpoint.checkpoint import (CheckpointError, load_checkpoint,
+                                         save_checkpoint)

@@ -3,6 +3,14 @@
 Dependency-free (no orbax): leaves are fetched to host, keyed by their
 tree path, and restored into an identically-structured template.  Includes
 step metadata and is atomic (write to tmp, rename).
+
+The training driver checkpoints the FULL train state — for compressed
+runs ``{"params", "opt_state", "comp_state"}`` — because the EF
+residuals in ``comp_state`` are load-bearing: a restart that drops them
+silently loses every gradient coordinate currently parked in ``u``/``v``
+(see DESIGN.md "Faults on the wire", resume contract).  Mismatches
+surface as :class:`CheckpointError` naming the offending key, not a bare
+``KeyError``/``AssertionError``.
 """
 from __future__ import annotations
 
@@ -14,6 +22,12 @@ import jax
 import numpy as np
 
 from repro.utils.tree import keystr_path
+
+
+class CheckpointError(ValueError):
+    """A checkpoint file that cannot restore into the requested
+    template: missing keys (an npz predating the full-state format, or
+    from a different model/config) or shape mismatches."""
 
 
 def _flatten(tree: Any) -> Dict[str, np.ndarray]:
@@ -42,15 +56,36 @@ def save_checkpoint(path: str, tree: Any, step: int) -> None:
 
 
 def load_checkpoint(path: str, template: Any) -> Tuple[Any, int]:
-    """Restore into the structure of ``template``; returns (tree, step)."""
+    """Restore into the structure of ``template``; returns (tree, step).
+
+    Raises :class:`CheckpointError` (never a bare KeyError/assert) when
+    the npz is missing a template key — the usual cause is a checkpoint
+    written before the full-state ``(params, opt_state, comp_state)``
+    format, which stored ``params`` only — or when a stored array's
+    shape disagrees with the template leaf."""
     with np.load(path) as z:
+        present = set(z.files)
+        if "__step__" not in present:
+            raise CheckpointError(
+                f"{path}: no '__step__' entry — not a checkpoint "
+                f"written by save_checkpoint")
         step = int(z["__step__"])
         flat, treedef = jax.tree_util.tree_flatten_with_path(template)
         leaves = []
         for p, leaf in flat:
             key = keystr_path(p)
+            if key not in present:
+                raise CheckpointError(
+                    f"{path}: missing entry {key!r} — this checkpoint "
+                    f"predates the full-state (params, opt_state, "
+                    f"comp_state) format or belongs to a different "
+                    f"model/config (it has {len(present) - 1} entries; "
+                    f"the template needs {len(flat)})")
             arr = z[key]
-            assert arr.shape == tuple(leaf.shape), (key, arr.shape,
-                                                    leaf.shape)
+            if arr.shape != tuple(leaf.shape):
+                raise CheckpointError(
+                    f"{path}: shape mismatch at {key!r}: checkpoint has "
+                    f"{tuple(arr.shape)}, template expects "
+                    f"{tuple(leaf.shape)}")
             leaves.append(arr.astype(leaf.dtype))
     return jax.tree_util.tree_unflatten(treedef, leaves), step

@@ -211,6 +211,32 @@ class CompressionConfig:
     # phase-3 encoder backend: "jnp" (conv_general_dilated reference) or
     # "pallas" (ops.lgc_encode_fast — im2col + fused MXU matmul kernel)
     ae_backend: str = "jnp"
+    # exchange guard policy (repro.dist.chaos.GUARD_POLICIES): "off"
+    # (the historical executor, zero added trace), "scrub" (zero
+    # non-finite/out-of-range op results and structurally-invalid packed
+    # contributions — the masked gradient stays in the EF residual and
+    # re-ships next round), "skip_round" (scrub AND drop the whole
+    # round's global gradient when any fault is seen) or "fail_fast"
+    # (scrub at trace level; the driver raises WireFaultError naming
+    # the faulting op labels from the recorded per-op counts)
+    guard: str = "off"
+    # append one int32 checksum word to every packed payload so the
+    # guard catches arbitrary finite bit-flips; +4 bytes per payload,
+    # priced honestly in both pricers (packed.index_nbytes/wire_nbytes)
+    guard_checksum: bool = False
+    # seeded fault injection (repro.dist.chaos.FaultSpec) — when any
+    # count/node is set, the transport stack auto-wraps in
+    # chaos:<base>.  Counts are per targeted op per step trace; fault
+    # positions derive from (fault_seed, op label), identical on every
+    # transport.  fault_ops: comma-separated plan-op labels to target
+    # ("" = all ops).
+    fault_seed: int = 0
+    fault_bitflips: int = 0
+    fault_nans: int = 0
+    fault_infs: int = 0
+    fault_drop_node: int = -1
+    fault_stale_node: int = -1
+    fault_ops: str = ""
 
 
 @dataclass(frozen=True)

@@ -85,6 +85,7 @@ from repro.dist.packed import PACKED_METHODS  # noqa: F401  (re-export)
 # objects drive rate.py's byte accounting.  Imported after the core.*
 # imports above so the plan module's own repro.core imports resolve
 # against the already-initialized submodules.
+from repro.dist import chaos as CH
 from repro.dist import plan as XP
 from repro.dist.transport import Transport, make_transport
 
@@ -204,6 +205,56 @@ class GradientCompressor:
                                     state["ae"], mom)
         return ae, mom, ae_loss
 
+    # -- guard plumbing --------------------------------------------------------
+
+    @staticmethod
+    def _guard_gate(env, stats):
+        """Surface the executor's per-op guard tally into the step stats
+        (``fault/<label>`` per op + ``guard_ok``) and return
+        ``(ok, policy)`` for round gating — or None when the executor
+        ran unguarded (the historical path, untouched)."""
+        g = env.get("__guard__")
+        if g is None:
+            return None
+        for lbl, bad in g["bad"].items():
+            stats[f"fault/{lbl}"] = bad
+        ok = jnp.asarray(g["ok"])
+        stats["guard_ok"] = ok.astype(jnp.int32)
+        return ok, g["policy"]
+
+    @staticmethod
+    def _gate_clear(gate, cleared, raw):
+        """EF retention under a guard: when the round saw any fault, the
+        accumulators stay UNCLEARED — the scrubbed/skipped contribution
+        re-ships from ``u``/``v`` next round instead of being lost
+        (the executor's scrub zeroes bad wire elements; this is the
+        matching sender-side half of the contract)."""
+        if gate is None:
+            return cleared
+        ok, _ = gate
+        return tuple(jnp.where(ok, c, r) for c, r in zip(cleared, raw))
+
+    @staticmethod
+    def _gate_round(gate, global_g):
+        """skip_round: a faulty round contributes NO gradient at all —
+        the optimizer sees zeros (and, with _gate_clear, the full
+        gradient stays in the residual for the next round)."""
+        if gate is None or gate[1] != "skip_round":
+            return global_g
+        ok, _ = gate
+        return jnp.where(ok, global_g, jnp.zeros_like(global_g))
+
+    @staticmethod
+    def _gate_tree(gate, new, old):
+        """Freeze an auxiliary state update (the AE and its momentum)
+        when the round saw any fault — training the autoencoder on a
+        scrubbed gradient vector would be training it on zeros."""
+        if gate is None:
+            return new
+        ok, _ = gate
+        return jax.tree_util.tree_map(
+            lambda a, b: jnp.where(ok, a, b), new, old)
+
     # ==========================================================================
     # THE step: every method, once, against a Transport
     # ==========================================================================
@@ -234,7 +285,8 @@ class GradientCompressor:
 
         if phase == PHASE_WARMUP or cc.method == "none":
             env = XP.execute(plan, t, {"grad": lambda env: g})
-            return env["grad"], state, stats
+            gate = self._guard_gate(env, stats)
+            return self._gate_round(gate, env["grad"]), state, stats
 
         fused = cc.topk_backend == "fused"
         if fused:
@@ -278,8 +330,11 @@ class GradientCompressor:
                 else t.pernode(self._select)(v)
             feeds["topk"] = lambda env: (vals, idx)
             env = XP.execute(plan, t, feeds)
+            gate = self._guard_gate(env, stats)
             global_g = env["topk"] + g_dense_of(env) + env["exempt_last"]
-            u, v = clear_own(u, v, idx, last_idx)
+            global_g = self._gate_round(gate, global_g)
+            u, v = self._gate_clear(gate, clear_own(u, v, idx, last_idx),
+                                    (u, v))
             return global_g, {**state, "u": u, "v": v}, stats
 
         # ---- LGC ----
@@ -334,16 +389,22 @@ class GradientCompressor:
             if is_ps:
                 feeds["gather_inno"] = lambda env: inno_of(env)[0]
             env = XP.execute(plan, t, feeds)
+            gate = self._guard_gate(env, stats)
             idx = env["support"]                             # (mu_pad,)
             sent = SP.scatter_to_dense(env["support_vals"], idx, n)
             global_g = sent + g_dense_of(env) + env["exempt_last"]
+            global_g = self._gate_round(gate, global_g)
             g_nodes = env["gather_vals"]                     # (K, mu_pad)
             inno_nodes = env["gather_inno"] if is_ps else None
             ae, ae_mom, ae_loss = self._ae_update(state, g_nodes,
                                                   inno_nodes, step,
                                                   t.ae_axes)
+            ae = self._gate_tree(gate, ae, state["ae"])
+            ae_mom = self._gate_tree(gate, ae_mom, state["ae_mom"])
             stats["ae_loss"] = ae_loss
-            u, v = clear_shared(u, v, idx, last_idx)
+            u, v = self._gate_clear(gate,
+                                    clear_shared(u, v, idx, last_idx),
+                                    (u, v))
             return global_g, {**state, "u": u, "v": v, "ae": ae,
                               "ae_mom": ae_mom}, stats
 
@@ -363,6 +424,7 @@ class GradientCompressor:
             feeds["innovations"] = lambda env: (inno_of(env)[1],
                                                 inno_of(env)[2])
             env = XP.execute(plan, t, feeds)
+            gate = self._guard_gate(env, stats)
             idx = env["support"]
             recs = AE.lgc_decode_ps(state["ae"], env["z_common"],
                                     env["innovations"])      # (K, mu_pad)
@@ -377,12 +439,15 @@ class GradientCompressor:
             # wire's bounded requantization error.
             feeds["encoding"] = lambda env: t.pernode(encode)(vals_of(env))
             env = XP.execute(plan, t, feeds)
+            gate = self._guard_gate(env, stats)
             idx = env["support"]
             rec = AE.lgc_decode_rar(state["ae"], env["encoding"][None])[0]
             rec_dense = SP.scatter_to_dense(rec, idx, n)
 
         global_g = rec_dense + g_dense_of(env) + env["exempt_last"]
-        u, v = clear_shared(u, v, idx, last_idx)
+        global_g = self._gate_round(gate, global_g)
+        u, v = self._gate_clear(gate, clear_shared(u, v, idx, last_idx),
+                                (u, v))
         return global_g, {**state, "u": u, "v": v}, stats
 
     # ==========================================================================
@@ -398,27 +463,38 @@ class GradientCompressor:
         ``node_index`` overrides the shard's linear index over ``axes``
         (pass it when the caller already computed it).  ``transport``
         overrides ``CompressionConfig.transport`` ("mesh", "ring",
-        "ring_q8", "ring_hier" or "ring_packed")."""
+        "ring_q8", "ring_hier" or "ring_packed", optionally prefixed
+        "chaos:" for fault injection).  When the config carries an
+        active FaultSpec (any ``fault_*`` set) the transport is
+        auto-wrapped in chaos:<base>; ``cc.guard`` arms the executor's
+        per-op validation either way."""
         kind = transport if transport is not None else \
             (self.cc.transport or "mesh")
-        if kind == "sim":
+        if kind.split(":", 1)[-1] == "sim":
             raise ValueError(
                 "transport='sim' is not a distributed transport (stacked "
                 "(K, n) arrays, no mesh axes) — call sim_step instead")
+        spec = CH.spec_from_config(self.cc)
+        if spec is not None and not kind.startswith("chaos:"):
+            kind = "chaos:" + kind
         t = make_transport(kind, self.K, axes, ae_axes, node_index,
                            scale_block=self.cc.q8_scale_block,
                            intra_chunk=self.cc.ring_intra_chunk,
                            inter_chunk=self.cc.ring_inter_chunk,
-                           interpret=self.cc.topk_interpret)
+                           interpret=self.cc.topk_interpret,
+                           guard=self.cc.guard, fault=spec)
         return self.step(t, state, g, step, phase)
 
     def sim_step(self, states, g_nodes: jnp.ndarray, step, phase: str):
         """Single-host emulation on stacked (K, n) node gradients.
         states: PyTree stacked over K (u, v per node; ae stored once).
         Returns (global_g (n,), states, stats)."""
-        t = make_transport("sim", self.K,
+        spec = CH.spec_from_config(self.cc)
+        kind = "chaos:sim" if spec is not None else "sim"
+        t = make_transport(kind, self.K,
                            scale_block=self.cc.q8_scale_block,
-                           interpret=self.cc.topk_interpret)
+                           interpret=self.cc.topk_interpret,
+                           guard=self.cc.guard, fault=spec)
         return self.step(t, states, g_nodes, step, phase)
 
 

@@ -8,7 +8,19 @@
                values) shared by the fake and real packed exchanges
   transport    the Transport protocol (Mesh / Ring / Sim) the gradient
                compressors are written against
+  chaos        seeded fault injection (ChaosTransport, chaos:<base>) +
+               the guard observability channels (fault tally,
+               structural sink, WireFaultError)
 """
+from repro.dist.chaos import (
+    GUARD_POLICIES,
+    ChaosTransport,
+    FaultSpec,
+    WireFaultError,
+    fault_report,
+    raise_on_faults,
+    reset_fault_tally,
+)
 from repro.dist.collectives import (
     all_gather,
     all_gather_packed,

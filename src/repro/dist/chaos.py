@@ -1,0 +1,410 @@
+"""Chaos wire: seeded fault injection over any Transport + the guard
+observability channels the executor and drivers read.
+
+The paper trains over unreliable, bandwidth-limited links, but the wire
+stack (ring/q8/packed/hier transports driven by the exchange-plan IR)
+assumed every ``ppermute`` payload arrives intact and every value is
+finite.  This module makes the failure behaviour *engineered*:
+
+  :class:`FaultSpec`       a static, seeded description of what goes
+                           wrong — payload bit-flips, NaN/Inf value
+                           injection, dropped/stale node contributions —
+                           optionally targeted at specific exchange-plan
+                           op labels.
+  :class:`ChaosTransport`  a Transport wrapper (``make_transport`` kind
+                           ``chaos:<base>``) composing over ANY base
+                           substrate: contribution faults (drop/stale)
+                           corrupt this node's input *before* the
+                           collective, payload faults (bit-flip/NaN/Inf)
+                           corrupt the result *after* it — at
+                           deterministic positions derived from
+                           ``(seed, op label)``, so the same spec
+                           injects the identical fault pattern on Sim,
+                           Mesh and every ring transport (which is what
+                           lets the equivalence gates run under faults).
+  fault tally              trace-time, mirroring the wire tally: every
+                           injection records ``(op label, fault kind,
+                           count)`` host-side, so tests can assert the
+                           per-op tally matches the injected spec
+                           EXACTLY (``reset_fault_tally`` before a step
+                           build, ``fault_report`` after).
+  structural sink          a scoped channel through which *validators*
+                           (the packed payload checks in
+                           ``repro.dist.packed``, the quantizer's
+                           non-finite mask) report traced bad counts to
+                           the executor's per-op guard tally.  Inactive
+                           (zero-cost) unless ``plan.execute`` runs with
+                           a guard policy.
+  :func:`raise_on_faults`  the host-side half of ``guard="fail_fast"``:
+                           traced code cannot raise, so the executor
+                           records per-op bad counts into the step stats
+                           and the driver raises :class:`WireFaultError`
+                           — naming the faulting op labels — when any
+                           count is nonzero.
+
+Import discipline: this module imports NO other repro module at top
+level (``collectives`` is reached lazily for the current wire-op label),
+so ``quantize`` and ``transport`` may import it freely.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+import zlib
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# guard policies plan.execute accepts: "off" (no validation), "scrub"
+# (zero non-finite/out-of-bound elements, keep the round), "skip_round"
+# (scrub AND zero the whole global gradient when any fault is seen —
+# residuals stay in u/v, so the round is lost, not the information),
+# "fail_fast" (scrub at trace level; the driver raises host-side via
+# raise_on_faults on the recorded per-op counts)
+GUARD_POLICIES = ("off", "scrub", "skip_round", "fail_fast")
+
+# |x| above this is treated as corrupt even though finite: a single
+# exponent-bit flip usually lands around 1e38, far above any real
+# gradient, so the guard catches most bit-flips that dodge isfinite
+GUARD_MAX = 1e30
+
+
+# ---------------------------------------------------------------------------
+# the fault description
+
+
+@dataclass(frozen=True)
+class FaultSpec:
+    """Static, seeded fault description.  All counts are per targeted
+    op per step trace; positions derive from ``(seed, crc32(label))`` so
+    they are deterministic across runs AND identical across transports
+    (Python ``hash`` is run-randomized — deliberately not used)."""
+    seed: int = 0
+    bitflips: int = 0        # XORed bits in the op result payload
+    nans: int = 0            # result elements overwritten with NaN
+    infs: int = 0            # result elements overwritten with +Inf
+    drop_node: int = -1      # this node's contribution becomes zeros
+    stale_node: int = -1     # this node contributes a rolled (finite,
+    #                          wrong — undetectable by design) payload
+    ops: Tuple[str, ...] = ()  # plan-op labels to target; () = all
+
+    @property
+    def active(self) -> bool:
+        return bool(self.bitflips or self.nans or self.infs
+                    or self.drop_node >= 0 or self.stale_node >= 0)
+
+
+def spec_from_config(cc) -> Optional[FaultSpec]:
+    """The CompressionConfig ``fault_*`` fields as a FaultSpec, or None
+    when no fault is configured (the common case — chaos stays entirely
+    out of the transport stack)."""
+    spec = FaultSpec(
+        seed=cc.fault_seed, bitflips=cc.fault_bitflips,
+        nans=cc.fault_nans, infs=cc.fault_infs,
+        drop_node=cc.fault_drop_node, stale_node=cc.fault_stale_node,
+        ops=tuple(s for s in cc.fault_ops.split(",") if s))
+    return spec if spec.active else None
+
+
+# ---------------------------------------------------------------------------
+# trace-time fault tally (mirrors collectives' wire tally semantics)
+
+_tally = threading.local()
+
+
+def _tally_ops() -> Dict[str, Dict[str, int]]:
+    if not hasattr(_tally, "ops"):
+        _tally.ops = {}
+    return _tally.ops
+
+
+def record_fault(label: str, kind: str, count: int) -> None:
+    """Record ``count`` injected faults of ``kind`` against op
+    ``label`` — host-side static ints at trace time, same caveats as
+    the wire tally (reset before a step build, read after; re-tracing
+    without a reset double-counts)."""
+    if not count:
+        return
+    per_op = _tally_ops().setdefault(label, {})
+    per_op[kind] = per_op.get(kind, 0) + int(count)
+
+
+def reset_fault_tally() -> None:
+    _tally_ops().clear()
+
+
+def fault_report() -> Dict[str, Dict[str, int]]:
+    """{op label: {fault kind: injected count}} since the last reset —
+    what the acceptance gate compares against the FaultSpec."""
+    return {label: dict(kinds) for label, kinds in _tally_ops().items()}
+
+
+# ---------------------------------------------------------------------------
+# the structural sink: validators -> executor guard tally
+
+_sink = threading.local()
+
+
+def structural_sink_active() -> bool:
+    return getattr(_sink, "out", None) is not None
+
+
+def _cur_trace():
+    # the current Trace object (stackless-jax identity of "where a
+    # value traced right now may legally flow"); None when the internal
+    # layout ever changes — degrading to never-append, never to a leak
+    try:
+        from jax._src import core as _core
+        return _core.trace_ctx.trace
+    except Exception:
+        return None
+
+
+@contextlib.contextmanager
+def structural_sink(out: List):
+    """Scope in which :func:`report_structural` appends traced bad
+    counts to ``out``.  The executor opens one per guarded op, so a
+    validator deep inside a transport (packed payload checks, the
+    quantizer's non-finite mask) lands its count on the right op."""
+    prev = getattr(_sink, "out", None)
+    prev_trace = getattr(_sink, "trace", None)
+    _sink.out = out
+    _sink.trace = _cur_trace()
+    try:
+        yield out
+    finally:
+        _sink.out = prev
+        _sink.trace = prev_trace
+
+
+def report_structural(count) -> None:
+    """Report a traced bad-element/bad-payload count to the active
+    sink; no-op (and zero trace cost for callers that gate on
+    :func:`structural_sink_active`) when no guard is running.
+
+    A count born under a transformation the sink's opener is not part
+    of — the sim transport vmaps its per-node work, so the quantizer's
+    count is a BatchTracer the executor could never legally sum — is
+    dropped rather than appended: appending would leak the tracer out
+    of its vmap scope and poison the executor's tally.  Detected by
+    Trace-object identity: append only when the reporter sits in the
+    exact trace the sink was opened in.  The op-level value guard still
+    covers the results of those inner-transform ops."""
+    out = getattr(_sink, "out", None)
+    if out is None:
+        return
+    if _cur_trace() is not getattr(_sink, "trace", None):
+        return
+    out.append(jnp.asarray(count).astype(jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# fail_fast's host half
+
+
+class WireFaultError(RuntimeError):
+    """Raised by :func:`raise_on_faults` under guard="fail_fast": the
+    message names every faulting op label and its bad-element count."""
+
+
+def raise_on_faults(stats: Dict[str, Any], step=None) -> None:
+    """Host-side check of one step's stats/metrics: raise
+    :class:`WireFaultError` if any per-op guard counter
+    (``fault/<label>``) is nonzero.  Traced code cannot raise, so this
+    is THE fail_fast trigger — drivers call it on concrete metrics."""
+    bad = {}
+    for k, v in stats.items():
+        if k.startswith("fault/"):
+            c = int(np.asarray(v).sum())
+            if c:
+                bad[k[len("fault/"):]] = c
+    if bad:
+        at = f" at step {int(step)}" if step is not None else ""
+        raise WireFaultError(
+            f"fail_fast: faulty exchange op(s){at}: {bad} "
+            f"(bad elements per plan-op label)")
+
+
+# ---------------------------------------------------------------------------
+# the transport wrapper
+
+
+def _current_label(fallback: str) -> str:
+    # lazy: collectives imports quantize which imports this module
+    from repro.dist import collectives as C
+    label = C.current_wire_op()
+    return label if label is not None else fallback
+
+
+@dataclass(frozen=True)
+class ChaosTransport:
+    """Transport wrapper injecting ``spec``'s faults around the base
+    substrate's collectives.  Delegates everything else — ``kind`` is
+    the base kind, so plan pricing and the packed/q8 dispatch behave
+    exactly as on the base transport and the fault layer composes over
+    any of them (``chaos:sim`` included, which is what gives the chaos
+    gates a cheap oracle under the identical fault pattern)."""
+    base: Any
+    spec: FaultSpec = field(default_factory=FaultSpec)
+
+    # -- delegation ---------------------------------------------------------
+
+    @property
+    def kind(self) -> str:
+        return self.base.kind
+
+    @property
+    def K(self) -> int:
+        return self.base.K
+
+    @property
+    def ae_axes(self):
+        return self.base.ae_axes
+
+    @property
+    def scale_block(self):
+        return self.base.scale_block
+
+    @property
+    def interpret(self):
+        return self.base.interpret
+
+    @property
+    def guard(self):
+        return self.base.guard
+
+    def pernode(self, fn, in_axes=0):
+        return self.base.pernode(fn, in_axes)
+
+    # -- fault machinery ----------------------------------------------------
+
+    def _on(self, label: str) -> bool:
+        return not self.spec.ops or label in self.spec.ops
+
+    def _rng(self, label: str, salt: int) -> np.random.Generator:
+        return np.random.default_rng(
+            (self.spec.seed, zlib.crc32(label.encode()), salt))
+
+    def _corrupt(self, res, label: str):
+        """Payload faults on an op *result*: bit-flips (via int32
+        bitcast for floats, direct XOR for int32 indices), then NaN and
+        +Inf overwrites — all at static positions, recorded in the
+        fault tally at trace time."""
+        s = self.spec
+        if not self._on(label) or not (s.bitflips or s.nans or s.infs):
+            return res
+        shape, dtype = res.shape, res.dtype
+        size = int(np.prod(shape)) if shape else 0
+        if size == 0:
+            return res
+        flat = res.reshape(-1)
+        floating = jnp.issubdtype(dtype, jnp.inexact)
+        if s.bitflips and (floating or dtype == jnp.int32):
+            m = min(s.bitflips, size)
+            rng = self._rng(label, 1)
+            pos = jnp.asarray(rng.choice(size, size=m, replace=False))
+            masks = jnp.asarray(
+                (np.uint32(1) << rng.integers(0, 32, size=m,
+                                              dtype=np.uint32))
+                .view(np.int32))
+            if floating:
+                w = jax.lax.bitcast_convert_type(
+                    flat.astype(jnp.float32), jnp.int32)
+                w = w.at[pos].set(w[pos] ^ masks)
+                flat = jax.lax.bitcast_convert_type(
+                    w, jnp.float32).astype(dtype)
+            else:
+                flat = flat.at[pos].set(flat[pos] ^ masks)
+            record_fault(label, "bitflip", m)
+        if s.nans and floating:
+            m = min(s.nans, size)
+            pos = jnp.asarray(self._rng(label, 2).choice(
+                size, size=m, replace=False))
+            flat = flat.at[pos].set(jnp.asarray(jnp.nan, dtype))
+            record_fault(label, "nan", m)
+        if s.infs and floating:
+            m = min(s.infs, size)
+            pos = jnp.asarray(self._rng(label, 3).choice(
+                size, size=m, replace=False))
+            flat = flat.at[pos].set(jnp.asarray(jnp.inf, dtype))
+            record_fault(label, "inf", m)
+        return flat.reshape(shape)
+
+    def _contrib(self, x, label: str):
+        """Contribution faults on this node's *input* to a collective:
+        ``drop_node``'s payload becomes zeros, ``stale_node``'s a
+        rolled (finite but wrong) copy — the finite-corruption case the
+        guard documents as undetectable-by-design, bounded by EF."""
+        s = self.spec
+        if not self._on(label) or (s.drop_node < 0 and s.stale_node < 0):
+            return x
+        sim = self.base.kind == "sim"
+        if 0 <= s.drop_node < self.K:
+            if sim:
+                x = x.at[s.drop_node].set(
+                    jnp.zeros_like(x[s.drop_node]))
+            else:
+                x = jnp.where(self.base._index() == s.drop_node,
+                              jnp.zeros_like(x), x)
+            record_fault(label, "drop", 1)
+        if 0 <= s.stale_node < self.K:
+            if sim:
+                x = x.at[s.stale_node].set(
+                    jnp.roll(x[s.stale_node], 1, axis=-1))
+            else:
+                x = jnp.where(self.base._index() == s.stale_node,
+                              jnp.roll(x, 1, axis=-1), x)
+            record_fault(label, "stale", 1)
+        return x
+
+    # -- the wire methods ---------------------------------------------------
+
+    def mean(self, x):
+        label = _current_label("mean")
+        return self._corrupt(self.base.mean(self._contrib(x, label)),
+                             label)
+
+    def sum(self, x):
+        label = _current_label("sum")
+        return self._corrupt(self.base.sum(self._contrib(x, label)),
+                             label)
+
+    def all_gather(self, x):
+        label = _current_label("all_gather")
+        return self._corrupt(
+            self.base.all_gather(self._contrib(x, label)), label)
+
+    def from_leader(self, x, leader):
+        label = _current_label("from_leader")
+        return self._corrupt(self.base.from_leader(x, leader), label)
+
+    def broadcast_packed(self, idx, leader, n, plan=None):
+        label = _current_label("broadcast_packed")
+        return self._corrupt(
+            self.base.broadcast_packed(idx, leader, n, plan=plan), label)
+
+    def mean_q8(self, x):
+        label = _current_label("mean_q8")
+        return self._corrupt(self.base.mean_q8(self._contrib(x, label)),
+                             label)
+
+    def sparse_mean(self, vals, idx, n):
+        label = _current_label("sparse_mean")
+        return self._corrupt(
+            self.base.sparse_mean(self._contrib(vals, label), idx, n),
+            label)
+
+    def sparse_gather_packed(self, vals, idx, n, plan=None):
+        label = _current_label("sparse_gather_packed")
+        return self._corrupt(
+            self.base.sparse_gather_packed(
+                self._contrib(vals, label), idx, n, plan=plan), label)
+
+    def sparse_mean_packed(self, vals, idx, n, plan=None):
+        label = _current_label("sparse_mean_packed")
+        return self._corrupt(
+            self.base.sparse_mean_packed(
+                self._contrib(vals, label), idx, n, plan=plan), label)

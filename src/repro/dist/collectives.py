@@ -83,6 +83,13 @@ def wire_op(label: str):
         _tally.label = prev
 
 
+def current_wire_op() -> Union[str, None]:
+    """The plan-op label of the innermost active :func:`wire_op` block,
+    or None outside the executor (the chaos layer reads this to target
+    and tally faults per op)."""
+    return getattr(_tally, "label", None)
+
+
 def record_wire_bytes(kind: str, nbytes: float) -> None:
     if not nbytes:          # zero-length payloads create no tally entry
         return

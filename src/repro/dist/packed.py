@@ -72,6 +72,7 @@ class PackPlan:
     n_buckets: int          # high-bits histogram length
     scale_block: int        # values per f32 scale (shared with quantize)
     raw_index: bool = False  # small-k fallback: sorted raw int32 indices
+    checksum: bool = False   # guard option: one trailing int32 sum word
 
     @property
     def hi_bits(self) -> int:
@@ -83,7 +84,8 @@ def _index_nbytes(n: int, k: int, lo_bits: int) -> int:
     return 4 * n_buckets + BP.packed_nbytes(k, lo_bits)
 
 
-def make_plan(n: int, k: int, scale_block: int = 0) -> PackPlan:
+def make_plan(n: int, k: int, scale_block: int = 0,
+              checksum: bool = False) -> PackPlan:
     """Pick ``lo_bits`` minimizing the exact index payload
     (4·n_buckets + packed_nbytes(k, lo_bits)) — all quantities static,
     so the scan runs at trace time and the optimum is exact.  Plane
@@ -91,7 +93,9 @@ def make_plan(n: int, k: int, scale_block: int = 0) -> PackPlan:
     kernels), so packing wins down to a handful of indices; only when
     even the best (buckets + planes) split costs more than raw int32
     (k ≲ 8) does the plan fall back to shipping the sorted indices raw —
-    the packed wire is never worse than 4 bytes/index."""
+    the packed wire is never worse than 4 bytes/index.  ``checksum``
+    appends one int32 sum word to the payload (the guard's structural
+    integrity check), priced honestly as +4 bytes in both pricers."""
     assert n >= 1 and k >= 1, (n, k)
     width = BP.bit_width(n)
     best = min(range(1, width + 1),
@@ -99,22 +103,33 @@ def make_plan(n: int, k: int, scale_block: int = 0) -> PackPlan:
     return PackPlan(n=n, k=k, width=width, lo_bits=best,
                     n_buckets=(n >> best) + 1,
                     scale_block=scale_block or Q.SCALE_BLOCK,
-                    raw_index=4 * k < _index_nbytes(n, k, best))
+                    raw_index=4 * k < _index_nbytes(n, k, best),
+                    checksum=checksum)
 
 
-def index_nbytes(plan: PackPlan) -> int:
-    """Wire bytes of the index half: counts + packed low-bit planes, or
-    the raw int32 indices when the fallback is cheaper."""
+def _index_base(plan: PackPlan) -> int:
+    # the index half WITHOUT the optional checksum word, so the two
+    # public pricers each add exactly one +4 (never double-counted)
     if plan.raw_index:
         return 4 * plan.k
     return _index_nbytes(plan.n, plan.k, plan.lo_bits)
 
 
+def index_nbytes(plan: PackPlan) -> int:
+    """Wire bytes of the index-only payload: counts + packed low-bit
+    planes (or the raw int32 indices when the fallback is cheaper),
+    plus the checksum word when the plan carries one."""
+    return _index_base(plan) + (4 if plan.checksum else 0)
+
+
 def wire_nbytes(plan: PackPlan) -> int:
     """Total payload bytes one node ships per packed sparse exchange —
     exactly the sum of the encoded arrays' nbytes (asserted against the
-    trace-time tally term by term in tests/test_wire_accounting.py)."""
-    return index_nbytes(plan) + Q.wire_nbytes(plan.k, plan.scale_block)
+    trace-time tally term by term in tests/test_wire_accounting.py).
+    The guard's checksum word, when enabled, is one more int32 on the
+    wire and is priced here — validation costs bytes, honestly."""
+    return _index_base(plan) + Q.wire_nbytes(plan.k, plan.scale_block) \
+        + (4 if plan.checksum else 0)
 
 
 def _sort_pairs(vals: jnp.ndarray, idx: jnp.ndarray):
@@ -122,17 +137,25 @@ def _sort_pairs(vals: jnp.ndarray, idx: jnp.ndarray):
     return jnp.take(vals, order), jnp.take(idx, order).astype(jnp.int32)
 
 
-def encode_indices(idx: jnp.ndarray, plan: PackPlan,
-                   interpret: bool = True) -> Tuple[jnp.ndarray, ...]:
-    """The index half of the wire on its own: *sorted-ascending* int32
-    ``idx`` (plan.k,) -> (counts, words), or (idx,) on the small-k
-    raw-index fallback.  The histogram expansion in
-    :func:`decode_indices` repeats bucket ids in order, so monotone
-    input is a hard precondition (the pair codec sorts for you;
-    index-only callers — the leader-support broadcast — must ship a
-    canonical sorted set anyway).  Indices roundtrip bit-exact for any
-    sorted values in [0, n], the ``select_topk`` sentinel ``n``
-    included."""
+def checksum_word(payload) -> jnp.ndarray:
+    """The guard's integrity word over a payload tuple: the int32 sum
+    (mod 2^32 — XLA integer adds wrap) of every array viewed as int32
+    (int8 widened, f32 bitcast so the check sees the exact wire bits).
+    Shape (1,): the word rides the wire as one more payload array and is
+    priced as +4 bytes."""
+    total = jnp.zeros((), jnp.int32)
+    for a in payload:
+        if jnp.issubdtype(a.dtype, jnp.floating):
+            w = jax.lax.bitcast_convert_type(a.astype(jnp.float32),
+                                             jnp.int32)
+        else:
+            w = a.astype(jnp.int32)
+        total = total + jnp.sum(w, dtype=jnp.int32)
+    return total.reshape((1,))
+
+
+def _encode_indices_body(idx: jnp.ndarray, plan: PackPlan,
+                         interpret: bool = True):
     assert idx.shape == (plan.k,), (idx.shape, plan)
     idx = idx.astype(jnp.int32)
     if plan.raw_index:
@@ -144,9 +167,8 @@ def encode_indices(idx: jnp.ndarray, plan: PackPlan,
     return counts, words
 
 
-def decode_indices(payload, plan: PackPlan,
-                   interpret: bool = True) -> jnp.ndarray:
-    """Inverse of :func:`encode_indices` -> sorted int32 (plan.k,)."""
+def _decode_indices_body(payload, plan: PackPlan,
+                         interpret: bool = True) -> jnp.ndarray:
     if plan.raw_index:
         (idx,) = payload
         return idx
@@ -157,23 +179,98 @@ def decode_indices(payload, plan: PackPlan,
     return (hi << plan.lo_bits) | lo
 
 
+def encode_indices(idx: jnp.ndarray, plan: PackPlan,
+                   interpret: bool = True) -> Tuple[jnp.ndarray, ...]:
+    """The index half of the wire on its own: *sorted-ascending* int32
+    ``idx`` (plan.k,) -> (counts, words), or (idx,) on the small-k
+    raw-index fallback — plus the trailing checksum word when the plan
+    carries one.  The histogram expansion in :func:`decode_indices`
+    repeats bucket ids in order, so monotone input is a hard
+    precondition (the pair codec sorts for you; index-only callers — the
+    leader-support broadcast — must ship a canonical sorted set anyway).
+    Indices roundtrip bit-exact for any sorted values in [0, n], the
+    ``select_topk`` sentinel ``n`` included."""
+    payload = _encode_indices_body(idx, plan, interpret=interpret)
+    if plan.checksum:
+        payload = payload + (checksum_word(payload),)
+    return payload
+
+
+def decode_indices(payload, plan: PackPlan,
+                   interpret: bool = True) -> jnp.ndarray:
+    """Inverse of :func:`encode_indices` -> sorted int32 (plan.k,).
+    The checksum word (when present) is *stripped*, not verified —
+    verification is the guard's job (:func:`validate_payload`), so the
+    unguarded path pays zero compute for it."""
+    if plan.checksum:
+        payload = payload[:-1]
+    return _decode_indices_body(payload, plan, interpret=interpret)
+
+
 def encode_sparse(vals: jnp.ndarray, idx: jnp.ndarray, plan: PackPlan,
                   interpret: bool = True):
     """-> the real wire payload: (counts, words, q, scales), or
-    (idx, q, scales) on the small-k raw-index fallback."""
+    (idx, q, scales) on the small-k raw-index fallback; one trailing
+    int32 checksum word covering every prior array when the plan asks
+    for it."""
     assert vals.shape == idx.shape == (plan.k,), (vals.shape, plan)
     vals_s, idx_s = _sort_pairs(vals, idx)
     q, scales = Q.quantize_i8(vals_s, plan.scale_block)
-    return encode_indices(idx_s, plan, interpret=interpret) + (q, scales)
+    payload = _encode_indices_body(idx_s, plan,
+                                   interpret=interpret) + (q, scales)
+    if plan.checksum:
+        payload = payload + (checksum_word(payload),)
+    return payload
 
 
 def decode_sparse(payload, plan: PackPlan, interpret: bool = True
                   ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Inverse of :func:`encode_sparse` -> (vals f32 (k,), idx int32
-    (k,)) in index-sorted order: indices bit-exact, values dequantized."""
+    (k,)) in index-sorted order: indices bit-exact, values dequantized.
+    Checksum stripped, not verified (see :func:`decode_indices`)."""
+    if plan.checksum:
+        payload = payload[:-1]
     q, scales = payload[-2], payload[-1]
-    idx = decode_indices(payload[:-2], plan, interpret=interpret)
+    idx = _decode_indices_body(payload[:-2], plan, interpret=interpret)
     return Q.dequantize_i8(q, scales, plan.k), idx
+
+
+def validate_payload(payload, plan: PackPlan, values: bool = True,
+                     interpret: bool = True):
+    """Structural validation of one node's received payload — the guard
+    hook the packed transport runs per contribution when a guard policy
+    is on.  Checks (each a traced predicate):
+
+      * checksum word matches a recompute over the prior arrays (only
+        when the plan carries one — the check that catches arbitrary
+        finite bit-flips the value predicates can't);
+      * bucket histogram is non-negative and sums to exactly k;
+      * value scales are finite (``values=True`` payloads only);
+      * decoded indices lie in [0, n] (sentinel n included) and are
+        monotone non-decreasing.
+
+    Returns ``(ok, bad)``: ``ok`` a scalar bool (all predicates hold),
+    ``bad`` the int32 count of failed predicates — what the executor
+    feeds the per-op fault tally through the structural sink."""
+    checks = []
+    body = payload
+    if plan.checksum:
+        body, chk = payload[:-1], payload[-1]
+        checks.append(jnp.all(checksum_word(body) == chk))
+    ipay = body[:-2] if values else body
+    if not plan.raw_index:
+        counts = ipay[0]
+        checks.append(jnp.all(counts >= 0))
+        checks.append(jnp.sum(counts) == plan.k)
+    if values:
+        checks.append(jnp.all(jnp.isfinite(body[-1])))
+    idx = _decode_indices_body(ipay, plan, interpret=interpret)
+    checks.append(jnp.all((idx >= 0) & (idx <= plan.n)))
+    if plan.k > 1:
+        checks.append(jnp.all(idx[1:] >= idx[:-1]))
+    flags = jnp.stack([jnp.logical_not(c) for c in checks])
+    bad = jnp.sum(flags.astype(jnp.int32))
+    return bad == 0, bad
 
 
 def fake_roundtrip(vals: jnp.ndarray, idx: jnp.ndarray,

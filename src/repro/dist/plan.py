@@ -68,6 +68,7 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Any, Callable, Dict, Optional, Sequence, Tuple
 
+import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import CompressionConfig
@@ -75,6 +76,7 @@ from repro.core import autoencoder as AE
 from repro.core.phases import PHASE_TOPK_AE, PHASE_WARMUP
 from repro.core.sparsify import (GradientLayout, innovation_frac,
                                  innovation_k)
+from repro.dist import chaos as CH
 from repro.dist import collectives as C
 from repro.dist import packed as PK
 from repro.dist import quantize as Q
@@ -226,9 +228,11 @@ def build_plan(cc: CompressionConfig, layout: GradientLayout, K: int,
                        n_vals=sum(l.size for l in layout.dense),
                        exempt=True)]
 
+    chk = cc.guard_checksum
+
     def sparse(label, n_vec, k, k_rate, mode="mean"):
         if packed:
-            pack = PK.make_plan(n_vec, k, sb) if k else None
+            pack = PK.make_plan(n_vec, k, sb, checksum=chk) if k else None
             return PackedSparseExchange(label, n_vec=n_vec, k=k,
                                         k_rate=k_rate, pack=pack,
                                         mode=mode)
@@ -245,7 +249,7 @@ def build_plan(cc: CompressionConfig, layout: GradientLayout, K: int,
 
     # lgc family: CLT-k rotating-leader support, then the phase payload
     ops.append(IndexBroadcast("support", n_vec=n, k=mp, k_rate=layout.mu,
-                              pack=PK.make_plan(n, mp, sb)))
+                              pack=PK.make_plan(n, mp, sb, checksum=chk)))
     zl = AE.compressed_length(mp)
     if phase == PHASE_TOPK_AE:
         ops.append(Reduce("support_vals", n_vals=mp))
@@ -258,7 +262,8 @@ def build_plan(cc: CompressionConfig, layout: GradientLayout, K: int,
         ops.append(LeaderBroadcast("z_common", n_vals=zl))
         ops.append(PackedSparseExchange(
             "innovations", n_vec=mp, k=k_inv, k_rate=k_inv,
-            pack=PK.make_plan(mp, k_inv, sb) if k_inv else None,
+            pack=PK.make_plan(mp, k_inv, sb, checksum=chk)
+            if k_inv else None,
             mode="gather"))
     else:
         ops.append(Reduce("encoding", n_vals=zl,
@@ -298,7 +303,37 @@ def _run_op(op: Op, t, args: tuple):
     raise TypeError(op)
 
 
-def execute(plan: Plan, t, feeds: Dict[str, Callable]) -> Dict[str, Any]:
+def _guard_result(op: Op, res):
+    """Validate one op's result under a guard policy -> (scrubbed
+    result, traced int32 bad-element count).
+
+    Float payloads: every non-finite element, and every finite element
+    with ``|x| > chaos.GUARD_MAX`` (a flipped exponent bit usually lands
+    ~1e38 — corrupt but isfinite), is zeroed.  Zeroing IS the
+    EF-retention contract: the compressor only clears ``u``/``v`` at
+    coordinates the exchange delivered, so a scrubbed contribution stays
+    in the residual and re-ships next round instead of being lost.
+
+    An IndexBroadcast result is repaired structurally: out-of-bound
+    entries clip into [0, n_vec] (n_vec = the select_topk sentinel) and
+    the set re-sorts, restoring the codec's monotone-sorted contract so
+    downstream gathers stay well-defined."""
+    if isinstance(op, IndexBroadcast):
+        idx = res
+        bad = jnp.sum(((idx < 0) | (idx > op.n_vec)).astype(jnp.int32))
+        if idx.shape[0] > 1:
+            bad = bad + jnp.sum((idx[1:] < idx[:-1]).astype(jnp.int32))
+        fixed = jnp.sort(jnp.clip(idx, 0, op.n_vec))
+        return jnp.where(bad > 0, fixed, idx), bad
+    if jnp.issubdtype(res.dtype, jnp.inexact):
+        mask = ~jnp.isfinite(res) | (jnp.abs(res) > CH.GUARD_MAX)
+        return jnp.where(mask, jnp.zeros_like(res), res), \
+            jnp.sum(mask.astype(jnp.int32))
+    return res, jnp.zeros((), jnp.int32)
+
+
+def execute(plan: Plan, t, feeds: Dict[str, Callable],
+            guard: Optional[str] = None) -> Dict[str, Any]:
     """Run ``plan.ops`` in order against transport ``t``.
 
     ``feeds[label](env) -> args tuple`` produces each op's transport
@@ -309,20 +344,48 @@ def execute(plan: Plan, t, feeds: Dict[str, Callable]) -> Dict[str, Any]:
     feed and vice versa — a step cannot silently skip or invent an
     exchange the plan (and therefore the pricing) doesn't know about.
     Each transport call runs under ``collectives.wire_op(label)``, so
-    the trace-time tally attributes its bytes to the op."""
+    the trace-time tally attributes its bytes to the op.
+
+    ``guard`` (default: the transport's own ``guard`` field; one of
+    ``chaos.GUARD_POLICIES``) arms per-op result validation: each
+    result is scrubbed through :func:`_guard_result`, structural bad
+    counts reported by the transport (packed payload validation, the
+    quantizer's non-finite mask) drain into the same per-op tally via
+    ``chaos.structural_sink``, and the returned env carries
+    ``env["__guard__"] = {"policy", "bad": {label: int32}, "ok"}`` for
+    the compressor's round gating (``skip_round``) and the driver's
+    fail_fast check.  ``guard="off"`` is byte-for-byte the historical
+    executor — zero added trace."""
     labels = set(plan.labels)
     missing = labels - set(feeds)
     extra = set(feeds) - labels
     assert not missing and not extra, (
         f"plan/feeds mismatch for {plan.method}/{plan.phase}: "
         f"missing feeds {sorted(missing)}, unplanned feeds {sorted(extra)}")
+    guard = guard if guard is not None else getattr(t, "guard", "off")
+    assert guard in CH.GUARD_POLICIES, guard
     env: Dict[str, Any] = {}
+    bad_by_op: Dict[str, Any] = {}
     for op in plan.ops:
         args = feeds[op.label](env)
         if not isinstance(args, tuple):
             args = (args,)
-        with C.wire_op(op.label):
-            env[op.label] = _run_op(op, t, args)
+        if guard == "off":
+            with C.wire_op(op.label):
+                env[op.label] = _run_op(op, t, args)
+            continue
+        sink: list = []
+        with C.wire_op(op.label), CH.structural_sink(sink):
+            res = _run_op(op, t, args)
+        res, bad = _guard_result(op, res)
+        for extra_bad in sink:
+            bad = bad + extra_bad
+        env[op.label] = res
+        bad_by_op[op.label] = bad
+    if guard != "off":
+        total = sum(bad_by_op.values())
+        env["__guard__"] = {"policy": guard, "bad": bad_by_op,
+                            "ok": total == 0}
     return env
 
 

@@ -22,6 +22,8 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
+from repro.dist import chaos as CH
+
 SCALE_BLOCK = 256     # values per f32 scale: 4/256 = 1.6% byte overhead
 _EPS = 1e-12          # all-zero blocks quantize to 0 without dividing by 0
 
@@ -36,8 +38,21 @@ def _blocked(x: jnp.ndarray, scale_block: int) -> jnp.ndarray:
 
 def quantize_i8(x: jnp.ndarray, scale_block: int = SCALE_BLOCK):
     """-> (q int8 (m, scale_block), scales f32 (m,)) of the flattened,
-    zero-padded ``x`` — exactly what the int8 ring puts on the wire."""
+    zero-padded ``x`` — exactly what the int8 ring puts on the wire.
+
+    Hardened against non-finite input: a NaN/Inf element would otherwise
+    poison its whole block's scale (``max|x|`` of anything containing
+    NaN is NaN) and from there every downstream partial sum, so
+    non-finite elements quantize to zero and their count is a *recorded
+    event* — reported to the executor's per-op fault tally when a guard
+    policy has a structural sink open, free (an isfinite + where on an
+    already-materialized block matrix) when not.  Finite inputs are
+    untouched: the masked path is bit-identical to the historical one."""
     xb = _blocked(x.astype(jnp.float32), scale_block)
+    nonfinite = ~jnp.isfinite(xb)
+    if CH.structural_sink_active():
+        CH.report_structural(jnp.sum(nonfinite.astype(jnp.int32)))
+    xb = jnp.where(nonfinite, jnp.zeros_like(xb), xb)
     scales = jnp.maximum(jnp.max(jnp.abs(xb), axis=1), _EPS) / 127.0
     q = jnp.clip(jnp.round(xb / scales[:, None]), -127, 127)
     return q.astype(jnp.int8), scales

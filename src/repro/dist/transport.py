@@ -63,6 +63,7 @@ from typing import Callable, Optional, Protocol, Sequence, Tuple, runtime_checka
 import jax
 import jax.numpy as jnp
 
+from repro.dist import chaos as CH
 from repro.dist import collectives as C
 from repro.dist import packed as PK
 from repro.dist import quantize as Q
@@ -105,6 +106,7 @@ class MeshTransport:
     node_index: Optional[jnp.ndarray] = None   # override for exotic callers
     scale_block: int = Q.SCALE_BLOCK           # int8-wire scale granularity
     interpret: bool = True                     # Pallas pack kernels on CPU
+    guard: str = "off"                         # executor guard policy
 
     kind = "mesh"              # class attr, not a field: the pricing key
 
@@ -291,9 +293,21 @@ class RingPackedTransport(RingTransport):
         gathered = C.all_gather_packed(payload, self.axes)
         outs = []
         for j in range(self.K):          # K is static; one decode/node
-            vj, ij = PK.decode_sparse(tuple(a[j] for a in gathered), plan,
-                                      interpret=self.interpret)
-            outs.append(_scatter(vj.astype(vals.dtype), ij, n))
+            pj = tuple(a[j] for a in gathered)
+            vj, ij = PK.decode_sparse(pj, plan, interpret=self.interpret)
+            out = _scatter(vj.astype(vals.dtype), ij, n)
+            if self.guard != "off":
+                # structural validation per received contribution: a
+                # payload failing the checks (checksum, histogram sum,
+                # index bounds/monotonicity, finite scales) is masked
+                # out entirely — its gradient stays in that node's EF
+                # residual — and the bad count lands on the executing
+                # op's fault tally through the structural sink
+                ok, bad = PK.validate_payload(pj, plan,
+                                              interpret=self.interpret)
+                CH.report_structural(bad)
+                out = jnp.where(ok, out, jnp.zeros_like(out))
+            outs.append(out)
         return jnp.stack(outs)
 
     def broadcast_packed(self, idx, leader, n, plan=None):
@@ -315,6 +329,15 @@ class RingPackedTransport(RingTransport):
         payload = PK.encode_indices(idx, plan, interpret=self.interpret)
         got = C.ring_broadcast_packed(payload, self.axes,
                                       self._index() == leader)
+        if self.guard != "off":
+            # report structural damage (checksum/histogram/bounds) on
+            # the received index payload; the *repair* happens at the
+            # executor, which scrubs the decoded set back into a valid
+            # sorted support (an index set has no zero-contribution
+            # fallback the way a value payload does)
+            ok, bad = PK.validate_payload(got, plan, values=False,
+                                          interpret=self.interpret)
+            CH.report_structural(bad)
         return PK.decode_indices(got, plan, interpret=self.interpret)
 
 
@@ -328,6 +351,7 @@ class SimTransport:
     ae_axes: Tuple[str, ...] = ()
     scale_block: int = Q.SCALE_BLOCK
     interpret: bool = True
+    guard: str = "off"
 
     kind = "sim"
 
@@ -392,25 +416,48 @@ def make_transport(kind: str, K: int, axes: Axis = (),
                    scale_block: int = 0,
                    intra_chunk: Optional[int] = None,
                    inter_chunk: Optional[int] = None,
-                   interpret: bool = True):
+                   interpret: bool = True,
+                   guard: str = "off",
+                   fault: Optional[CH.FaultSpec] = None):
     """Factory keyed by CompressionConfig.transport.  ``scale_block``
     (0 = default) sets the int8-wire scale granularity; ``intra_chunk``/
     ``inter_chunk`` tune the hierarchical ring's per-level message size;
     ``interpret`` interprets the packed wire's Pallas pack kernels (pass
-    False on real TPUs, same contract as ``topk_interpret``)."""
+    False on real TPUs, same contract as ``topk_interpret``).  ``guard``
+    (one of ``chaos.GUARD_POLICIES``) arms per-contribution structural
+    validation inside the transport; the executor reads the same field
+    to decide its own result validation.  ``kind`` may be prefixed
+    ``chaos:<base>`` to wrap the base substrate in a
+    :class:`~repro.dist.chaos.ChaosTransport` injecting ``fault``'s
+    seeded corruption — identical fault positions on every base, which
+    is what lets the equivalence gates run under faults."""
+    spec = None
+    if kind.startswith("chaos:"):
+        kind = kind[len("chaos:"):]
+        spec = fault if fault is not None else CH.FaultSpec()
+    elif fault is not None and fault.active:
+        spec = fault
     sb = scale_block or Q.SCALE_BLOCK
+    if guard not in CH.GUARD_POLICIES:
+        raise ValueError(f"unknown guard {guard!r}; "
+                         f"known: {CH.GUARD_POLICIES}")
     args = (tuple(axes), K, tuple(ae_axes), node_index, sb, interpret)
+    base = None
     if kind == "mesh":
-        return MeshTransport(*args)
-    if kind == "ring":
-        return RingTransport(*args)
-    if kind == "ring_q8":
-        return RingQ8Transport(*args)
-    if kind == "ring_hier":
-        return RingHierTransport(*args, intra_chunk or None,
-                                 inter_chunk or None)
-    if kind == "ring_packed":
-        return RingPackedTransport(*args)
-    if kind == "sim":
-        return SimTransport(K, tuple(ae_axes), sb, interpret)
-    raise ValueError(f"unknown transport {kind!r}; known: {TRANSPORTS}")
+        base = MeshTransport(*args, guard=guard)
+    elif kind == "ring":
+        base = RingTransport(*args, guard=guard)
+    elif kind == "ring_q8":
+        base = RingQ8Transport(*args, guard=guard)
+    elif kind == "ring_hier":
+        base = RingHierTransport(*args, guard=guard,
+                                 intra_chunk=intra_chunk or None,
+                                 inter_chunk=inter_chunk or None)
+    elif kind == "ring_packed":
+        base = RingPackedTransport(*args, guard=guard)
+    elif kind == "sim":
+        base = SimTransport(K, tuple(ae_axes), sb, interpret, guard)
+    if base is None:
+        raise ValueError(f"unknown transport {kind!r}; known: "
+                         f"{TRANSPORTS} (optionally chaos:<base>)")
+    return CH.ChaosTransport(base, spec) if spec is not None else base

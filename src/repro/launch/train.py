@@ -29,9 +29,11 @@ def parse_args(argv=None):
                    choices=["none", "sparse_gd", "dgc", "lgc_ps", "lgc_rar",
                             "lgc_rar_q8"])
     p.add_argument("--sparsity", type=float, default=0.001)
+    base_transports = ["mesh", "ring", "ring_q8", "ring_hier",
+                       "ring_packed"]
     p.add_argument("--transport", default="mesh",
-                   choices=["mesh", "ring", "ring_q8", "ring_hier",
-                            "ring_packed"],
+                   choices=base_transports + ["chaos:" + t
+                                              for t in base_transports],
                    help="communication substrate: lax collectives (mesh), "
                         "the explicit chunked ring with measured wire "
                         "bytes (ring), the int8-wire ring that makes "
@@ -40,7 +42,10 @@ def parse_args(argv=None):
                         "multi-axis dp meshes (ring_hier), or the packed "
                         "sparse wire — bit-packed indices + int8 values "
                         "for the sparse_gd/dgc/lgc_ps top-k exchanges "
-                        "(ring_packed)")
+                        "(ring_packed).  A chaos:<base> prefix wraps the "
+                        "substrate in the seeded fault injector "
+                        "(--fault-*); setting any --fault-* flag wraps "
+                        "automatically")
     p.add_argument("--topk-backend", default="jnp",
                    choices=["jnp", "pallas", "fused"],
                    help="residual top-k selection backend (fused = the "
@@ -76,6 +81,44 @@ def parse_args(argv=None):
     p.add_argument("--seed", type=int, default=0)
     p.add_argument("--checkpoint-dir", default="")
     p.add_argument("--checkpoint-every", type=int, default=0)
+    p.add_argument("--resume", default="",
+                   help="checkpoint .npz to resume from: restores the "
+                        "FULL train state — (params, opt_state, "
+                        "comp_state) for compressed runs, EF residuals "
+                        "included — fast-forwards the data stream and "
+                        "continues at the saved step, bit-identically to "
+                        "an uninterrupted run")
+    p.add_argument("--guard", default="off",
+                   choices=["off", "scrub", "skip_round", "fail_fast"],
+                   help="exchange guard policy (repro.dist.chaos): scrub "
+                        "zeroes non-finite/invalid wire payloads (the "
+                        "masked gradient stays in the EF residual), "
+                        "skip_round additionally drops a faulty round's "
+                        "whole gradient, fail_fast raises WireFaultError "
+                        "naming the faulting op labels")
+    p.add_argument("--guard-checksum", action="store_true",
+                   help="append one int32 checksum word to every packed "
+                        "payload (+4 wire bytes, priced honestly) so the "
+                        "guard catches arbitrary finite bit-flips")
+    p.add_argument("--fault-seed", type=int, default=0)
+    p.add_argument("--fault-bitflips", type=int, default=0,
+                   help="XOR this many seeded bit positions into each "
+                        "targeted op's result payload per step")
+    p.add_argument("--fault-nans", type=int, default=0,
+                   help="overwrite this many seeded result elements "
+                        "with NaN per targeted op per step")
+    p.add_argument("--fault-infs", type=int, default=0,
+                   help="overwrite this many seeded result elements "
+                        "with +Inf per targeted op per step")
+    p.add_argument("--fault-drop-node", type=int, default=-1,
+                   help="this node's contribution to every targeted "
+                        "collective becomes zeros")
+    p.add_argument("--fault-stale-node", type=int, default=-1,
+                   help="this node contributes a rolled (finite, wrong) "
+                        "payload to every targeted collective")
+    p.add_argument("--fault-ops", default="",
+                   help="comma-separated exchange-plan op labels to "
+                        "target (default: all ops)")
     p.add_argument("--log-every", type=int, default=10)
     p.add_argument("--metrics-out", default="")
     return p.parse_args(argv)
@@ -117,7 +160,16 @@ def main(argv=None):
                            topk_backend=args.topk_backend,
                            ae_backend=args.ae_backend,
                            extract_backend=args.extract_backend,
-                           topk_interpret=not args.topk_compiled)
+                           topk_interpret=not args.topk_compiled,
+                           guard=args.guard,
+                           guard_checksum=args.guard_checksum,
+                           fault_seed=args.fault_seed,
+                           fault_bitflips=args.fault_bitflips,
+                           fault_nans=args.fault_nans,
+                           fault_infs=args.fault_infs,
+                           fault_drop_node=args.fault_drop_node,
+                           fault_stale_node=args.fault_stale_node,
+                           fault_ops=args.fault_ops)
     tc = TrainConfig(optimizer=args.optimizer, learning_rate=args.lr,
                      steps=args.steps, seed=args.seed, compression=cc)
     mesh = make_host_mesh(args.data_shards, args.model_shards,
@@ -136,17 +188,50 @@ def main(argv=None):
     rng = jax.random.PRNGKey(args.seed)
     use_lgc = args.compression != "none"
     history = []
+    from repro.dist import chaos
+
+    guard_on = cc.guard != "off"
+    faults_total = 0
+
+    def _count_faults(metrics):
+        # per-op guard counters -> one host-side running total (what the
+        # ci chaos gate asserts nonzero; also the fail_fast trigger set)
+        return sum(int(np.asarray(v).sum()) for k, v in metrics.items()
+                   if k.startswith("fault/"))
+
     if use_lgc:
         from repro.dist import collectives as coll
         lts = make_lgc_train_step(model, tc, mesh)
         params, opt_state, comp_state = lts.init(rng, model, mesh)
+        start_step = 0
+        if args.resume:
+            # full-state resume: the freshly-initialized state is the
+            # shape/dtype template; EF residuals (comp_state u/v) and
+            # the optimizer moments come back exactly, so the continued
+            # trajectory is bit-identical to an uninterrupted run
+            tree = {"params": params, "opt_state": opt_state,
+                    "comp_state": comp_state}
+            loaded, start_step = load_checkpoint(args.resume, tree)
+            params = jax.device_put(loaded["params"],
+                                    lts.params_sharding)
+            opt_state = jax.device_put(loaded["opt_state"],
+                                       lts.opt_sharding)
+            comp_state = jax.device_put(loaded["comp_state"],
+                                        lts.comp_sharding)
+            log.info("resumed full train state from %s at step %d",
+                     args.resume, start_step)
         report = rate_report(cc, lts.compressor.layout, lts.dp_size)
         log.info("compression=%s CR(avg)=%.1fx bytes/node=%.0f",
                  cc.method, report.compression_ratio, report.bytes_per_node)
         fns = {}
         batch = first
+        for _ in range(start_step):
+            # the batch at step s is the s-th yield of the stream —
+            # fast-forward so the resumed run consumes the same data an
+            # uninterrupted run would have at this step
+            batch = next(data)
         t0 = time.time()
-        for step in range(args.steps):
+        for step in range(start_step, args.steps):
             phase = phase_for_step(step, cc)
             if phase not in fns:
                 # per-phase wire accounting: bytes are recorded at trace
@@ -156,29 +241,54 @@ def main(argv=None):
                 fns[phase] = lts.make_step(phase, sds)
             params, opt_state, comp_state, metrics = fns[phase](
                 params, opt_state, comp_state, batch, step)
-            if step == 0 or phase_for_step(step - 1, cc) != phase:
+            if step == start_step or phase_for_step(step - 1, cc) != phase:
                 wire = coll.wire_report()
                 if wire:
                     log.info("phase=%s wire bytes/node/step: %s", phase,
                              {k: int(v) for k, v in wire.items()})
             batch = next(data)
+            if guard_on:
+                faults_total += _count_faults(metrics)
+                if cc.guard == "fail_fast":
+                    chaos.raise_on_faults(metrics, step=step)
             if step % args.log_every == 0 or step == args.steps - 1:
                 loss = float(metrics["loss"])
-                history.append({"step": step, "phase": phase, "loss": loss})
+                rec = {"step": step, "phase": phase, "loss": loss}
+                if guard_on:
+                    rec["faults"] = faults_total
+                history.append(rec)
                 log.info("step %4d  phase=%-10s loss=%.4f", step, phase,
                          loss)
             if args.checkpoint_every and args.checkpoint_dir \
                     and step and step % args.checkpoint_every == 0:
-                save_checkpoint(os.path.join(args.checkpoint_dir,
-                                             "ckpt.npz"), params, step)
+                # step+1 = the next step to run on resume; the FULL
+                # state ships, EF residuals included — params alone
+                # would silently drop every coordinate parked in u/v
+                save_checkpoint(
+                    os.path.join(args.checkpoint_dir, "ckpt.npz"),
+                    {"params": params, "opt_state": opt_state,
+                     "comp_state": comp_state}, step + 1)
         log.info("done in %.1fs", time.time() - t0)
+        final_tree = {"params": params, "opt_state": opt_state,
+                      "comp_state": comp_state}
     else:
         ats = make_auto_train_step(model, tc, mesh)
         params, opt_state = ats.init(rng, model)
+        start_step = 0
+        if args.resume:
+            tree = {"params": params, "opt_state": opt_state}
+            loaded, start_step = load_checkpoint(args.resume, tree)
+            params = jax.device_put(loaded["params"], ats.params_sharding)
+            opt_state = jax.device_put(loaded["opt_state"],
+                                       ats.opt_sharding)
+            log.info("resumed train state from %s at step %d",
+                     args.resume, start_step)
         fn = ats.step_fn(sds)
         batch = first
+        for _ in range(start_step):
+            batch = next(data)
         t0 = time.time()
-        for step in range(args.steps):
+        for step in range(start_step, args.steps):
             params, opt_state, metrics = fn(params, opt_state, batch, step)
             batch = next(data)
             if step % args.log_every == 0 or step == args.steps - 1:
@@ -188,13 +298,15 @@ def main(argv=None):
                 log.info("step %4d  loss=%.4f", step, loss)
             if args.checkpoint_every and args.checkpoint_dir \
                     and step and step % args.checkpoint_every == 0:
-                save_checkpoint(os.path.join(args.checkpoint_dir,
-                                             "ckpt.npz"), params, step)
+                save_checkpoint(
+                    os.path.join(args.checkpoint_dir, "ckpt.npz"),
+                    {"params": params, "opt_state": opt_state}, step + 1)
         log.info("done in %.1fs", time.time() - t0)
+        final_tree = {"params": params, "opt_state": opt_state}
 
     if args.checkpoint_dir:
         save_checkpoint(os.path.join(args.checkpoint_dir, "ckpt.npz"),
-                        params, args.steps)
+                        final_tree, args.steps)
     if args.metrics_out:
         with open(args.metrics_out, "w") as f:
             json.dump(history, f, indent=1)

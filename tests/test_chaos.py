@@ -1,0 +1,486 @@
+"""Chaos wire: seeded fault injection + guarded execution.
+
+The acceptance contract (ISSUE 9): the per-op fault tally matches the
+injected FaultSpec EXACTLY; ``scrub``/``skip_round`` keep gradients
+finite with a bounded blast radius and EF-residual retention (scrubbed
+contributions stay in u/v); ``fail_fast`` raises
+:class:`~repro.dist.chaos.WireFaultError` naming the faulting op label;
+the distributed chaos transports (``chaos:ring``, ``chaos:ring_packed``)
+match the ``chaos:sim`` oracle under the IDENTICAL fault pattern (fault
+positions derive from ``(seed, op label)``, not from the substrate);
+and the packed payload's structural validation + checksum word are
+priced honestly."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import CompressionConfig
+from repro.core import build_compressor
+from repro.core.phases import PHASE_COMPRESSED, PHASE_TOPK_AE, phase_for_step
+from repro.dist import chaos as CH
+from repro.dist import packed as PK
+from repro.dist.chaos import FaultSpec, WireFaultError
+from repro.dist.transport import make_transport
+
+PARAMS = {
+    "embed": {"w": jnp.zeros((32, 16))},
+    "layer1": {"w": jnp.zeros((64, 64)), "b": jnp.zeros((64,))},
+    "layer2": {"w": jnp.zeros((64, 64))},
+    "lm_head": {"w": jnp.zeros((16, 32))},
+}
+K = 4
+METHODS = ["none", "sparse_gd", "dgc", "lgc_rar", "lgc_rar_q8", "lgc_ps"]
+
+
+def _cc(method, **kw):
+    kw.setdefault("sparsity", 0.05)
+    kw.setdefault("innovation_sparsity", 0.005)
+    kw.setdefault("warmup_steps", 1)
+    kw.setdefault("ae_train_steps", 2)
+    return CompressionConfig(method=method, **kw)
+
+
+def _grad(comp, seed=1, scale=0.01):
+    return jax.random.normal(jax.random.PRNGKey(seed),
+                             (K, comp.layout.n_total)) * scale
+
+
+# ---------------------------------------------------------------------------
+# FaultSpec / factory plumbing
+
+
+def test_spec_from_config_inactive_by_default():
+    assert CH.spec_from_config(_cc("dgc")) is None
+    spec = CH.spec_from_config(_cc("dgc", fault_nans=3, fault_seed=7,
+                                   fault_ops="topk,support"))
+    assert spec == FaultSpec(seed=7, nans=3, ops=("topk", "support"))
+    assert spec.active
+
+
+def test_make_transport_chaos_kinds():
+    t = make_transport("chaos:ring", K, axes=("data",))
+    assert isinstance(t, CH.ChaosTransport)
+    assert t.kind == "ring" and t.K == K and t.guard == "off"
+    spec = FaultSpec(seed=1, bitflips=2)
+    tg = make_transport("chaos:ring_packed", K, axes=("data",),
+                        guard="scrub", fault=spec)
+    assert tg.spec == spec and tg.guard == "scrub"
+    assert tg.base.kind == "ring_packed"
+    # an active spec wraps even without the prefix (the config-driven
+    # auto-wrap path dist_step/sim_step use)
+    ta = make_transport("sim", K, fault=spec)
+    assert isinstance(ta, CH.ChaosTransport) and ta.kind == "sim"
+    with pytest.raises(ValueError):
+        make_transport("chaos:pigeon", K)
+    with pytest.raises(ValueError):
+        make_transport("ring", K, axes=("data",), guard="panic")
+
+
+# ---------------------------------------------------------------------------
+# the tally contract: injected == recorded, per op, per kind, EXACTLY
+
+
+def test_fault_tally_matches_spec_exactly():
+    cc = _cc("dgc", fault_seed=3, fault_bitflips=2, fault_nans=2,
+             fault_infs=1, fault_ops="topk", guard="scrub")
+    comp = build_compressor(cc, PARAMS, K)
+    states = comp.init_sim_states(jax.random.PRNGKey(0))
+    CH.reset_fault_tally()
+    gg, states, stats = comp.sim_step(states, _grad(comp), 0,
+                                      PHASE_TOPK_AE)
+    assert CH.fault_report() == {"topk": {"bitflip": 2, "nan": 2,
+                                          "inf": 1}}
+    # the guard saw at least the injected non-finites (a bit-flip may or
+    # may not produce a guard-visible value)
+    assert int(stats["fault/topk"]) >= 3
+    assert int(stats["guard_ok"]) == 0
+    for lbl in ("exempt_dense", "exempt_last"):
+        assert int(stats[f"fault/{lbl}"]) == 0, lbl
+    assert bool(jnp.all(jnp.isfinite(gg)))
+    # untargeted ops stay clean across repeated steps; tally accumulates
+    gg, states, _ = comp.sim_step(states, _grad(comp, 2), 1,
+                                  PHASE_TOPK_AE)
+    assert CH.fault_report()["topk"] == {"bitflip": 4, "nan": 4, "inf": 2}
+
+
+def test_drop_and_stale_node_tally_and_finiteness():
+    cc = _cc("dgc", fault_drop_node=1, fault_stale_node=2,
+             fault_ops="topk", guard="scrub")
+    comp = build_compressor(cc, PARAMS, K)
+    states = comp.init_sim_states(jax.random.PRNGKey(0))
+    CH.reset_fault_tally()
+    gg, _, stats = comp.sim_step(states, _grad(comp), 0, PHASE_TOPK_AE)
+    assert CH.fault_report() == {"topk": {"drop": 1, "stale": 1}}
+    # drop/stale are FINITE corruptions: undetectable by the value guard
+    # (documented), bounded instead by EF — the guard sees nothing
+    assert int(stats["fault/topk"]) == 0
+    assert bool(jnp.all(jnp.isfinite(gg)))
+
+
+# ---------------------------------------------------------------------------
+# guard semantics: scrub keeps the round finite with EF retention;
+# skip_round zeroes the whole gradient; off propagates the poison
+
+
+@pytest.mark.parametrize("method", ["sparse_gd", "dgc"])
+def test_scrub_bounded_blast_radius_and_ef_retention(method):
+    m_nans = 3
+    clean = build_compressor(_cc(method), PARAMS, K)
+    states_c = clean.init_sim_states(jax.random.PRNGKey(0))
+    g = _grad(clean)
+    g_clean, states_c, _ = clean.sim_step(states_c, g, 0, PHASE_TOPK_AE)
+
+    cc = _cc(method, fault_nans=m_nans, fault_ops="topk", guard="scrub")
+    comp = build_compressor(cc, PARAMS, K)
+    states0 = comp.init_sim_states(jax.random.PRNGKey(0))
+    g_f, states_f, stats = comp.sim_step(states0, g, 0, PHASE_TOPK_AE)
+
+    assert bool(jnp.all(jnp.isfinite(g_f)))
+    assert int(stats["guard_ok"]) == 0
+    # blast radius: only the scrubbed coordinates of the targeted op can
+    # differ from the clean oracle — at most the injected count (zero is
+    # legal: a NaN landing on an already-zero coordinate scrubs to the
+    # clean value)
+    ndiff = int(jnp.sum(g_f != g_clean))
+    assert ndiff <= m_nans, ndiff
+    # EF retention: the faulty round leaves the accumulators UNCLEARED
+    # (pure accumulate), so the scrubbed contribution re-ships next round
+    u_exp, v_exp = jax.vmap(comp._accumulate)(
+        jnp.zeros_like(states0["u"]), jnp.zeros_like(states0["v"]), g)
+    assert bool(jnp.all(states_f["u"] == u_exp))
+    assert bool(jnp.all(states_f["v"] == v_exp))
+    # ... whereas the clean run cleared its sent coordinates
+    assert not bool(jnp.all(states_c["v"] == v_exp))
+
+
+def test_skip_round_zeroes_global_gradient():
+    cc = _cc("dgc", fault_nans=1, fault_ops="topk", guard="skip_round")
+    comp = build_compressor(cc, PARAMS, K)
+    states = comp.init_sim_states(jax.random.PRNGKey(0))
+    g = _grad(comp)
+    gg, states, stats = comp.sim_step(states, g, 0, PHASE_TOPK_AE)
+    assert int(stats["guard_ok"]) == 0
+    assert bool(jnp.all(gg == 0.0))            # the round is dropped...
+    assert bool(jnp.any(states["v"] != 0.0))   # ...the information is not
+    # a clean round under skip_round passes through untouched
+    cc2 = _cc("dgc", guard="skip_round")
+    comp2 = build_compressor(cc2, PARAMS, K)
+    states2 = comp2.init_sim_states(jax.random.PRNGKey(0))
+    gg2, _, stats2 = comp2.sim_step(states2, g, 0, PHASE_TOPK_AE)
+    assert int(stats2["guard_ok"]) == 1
+    assert bool(jnp.any(gg2 != 0.0))
+
+
+def test_guard_off_propagates_poison():
+    cc = _cc("dgc", fault_nans=1, fault_ops="topk", guard="off")
+    comp = build_compressor(cc, PARAMS, K)
+    states = comp.init_sim_states(jax.random.PRNGKey(0))
+    gg, _, stats = comp.sim_step(states, _grad(comp), 0, PHASE_TOPK_AE)
+    assert not bool(jnp.all(jnp.isfinite(gg)))   # this is what "off" costs
+    assert "guard_ok" not in stats
+
+
+@pytest.mark.parametrize("method", ["lgc_rar", "lgc_rar_q8", "lgc_ps"])
+def test_lgc_methods_scrub_keeps_compressed_phase_finite(method):
+    cc = _cc(method, fault_nans=2, fault_infs=1, guard="scrub")
+    comp = build_compressor(cc, PARAMS, K)
+    states = comp.init_sim_states(jax.random.PRNGKey(0))
+    rng = jax.random.PRNGKey(1)
+    for step in range(5):                     # warmup -> topk_ae -> comp
+        rng, k2 = jax.random.split(rng)
+        g = jax.random.normal(k2, (K, comp.layout.n_total)) * 0.01
+        gg, states, stats = comp.sim_step(states, g, step,
+                                          phase_for_step(step, cc))
+        assert bool(jnp.all(jnp.isfinite(gg))), (method, step)
+        assert int(stats["guard_ok"]) == 0, (method, step)
+    for leaf in jax.tree_util.tree_leaves(states):
+        assert bool(jnp.all(jnp.isfinite(leaf))), method
+
+
+# ---------------------------------------------------------------------------
+# fail_fast: scrubbed at trace level, raised host-side with the op label
+
+
+def test_fail_fast_raises_with_faulting_op_label():
+    cc = _cc("dgc", fault_nans=2, fault_ops="topk", guard="fail_fast")
+    comp = build_compressor(cc, PARAMS, K)
+    states = comp.init_sim_states(jax.random.PRNGKey(0))
+    gg, _, stats = comp.sim_step(states, _grad(comp), 0, PHASE_TOPK_AE)
+    assert bool(jnp.all(jnp.isfinite(gg)))     # still scrubbed in-trace
+    with pytest.raises(WireFaultError, match="topk"):
+        CH.raise_on_faults(stats, step=0)
+    # a clean step raises nothing
+    cc2 = _cc("dgc", guard="fail_fast")
+    comp2 = build_compressor(cc2, PARAMS, K)
+    states2 = comp2.init_sim_states(jax.random.PRNGKey(0))
+    _, _, stats2 = comp2.sim_step(states2, _grad(comp2), 0,
+                                  PHASE_TOPK_AE)
+    CH.raise_on_faults(stats2, step=0)
+
+
+# ---------------------------------------------------------------------------
+# packed payload: checksum pricing + structural validation
+
+
+def test_packed_checksum_priced_honestly():
+    for (n, k) in ((4096, 64), (4096, 4)):     # packed + raw_index regimes
+        plain = PK.make_plan(n, k, 64)
+        chk = PK.make_plan(n, k, 64, checksum=True)
+        assert not plain.checksum and chk.checksum
+        assert PK.index_nbytes(chk) == PK.index_nbytes(plain) + 4
+        assert PK.wire_nbytes(chk) == PK.wire_nbytes(plain) + 4
+        # the checksum word adds exactly ONE int32 to the payload, and
+        # measured bytes == accounted bytes still holds array-sum-wise
+        idx = jnp.sort(jax.random.choice(jax.random.PRNGKey(0), n, (k,),
+                                         replace=False)).astype(jnp.int32)
+        vals = jax.random.normal(jax.random.PRNGKey(1), (k,))
+        pay_p = PK.encode_sparse(vals, idx, plain)
+        pay_c = PK.encode_sparse(vals, idx, chk)
+        assert len(pay_c) == len(pay_p) + 1
+        assert sum(a.nbytes for a in pay_c) == PK.wire_nbytes(chk)
+        ipay_c = PK.encode_indices(idx, chk)
+        assert sum(a.nbytes for a in ipay_c) == PK.index_nbytes(chk)
+        # roundtrip unchanged by the trailing word
+        v2, i2 = PK.decode_sparse(pay_c, chk)
+        np.testing.assert_array_equal(np.asarray(i2), np.asarray(idx))
+        np.testing.assert_array_equal(
+            np.asarray(PK.decode_indices(ipay_c, chk)), np.asarray(idx))
+
+
+def test_validate_payload_accepts_clean_flags_corrupt():
+    n, k = 4096, 64
+    plan = PK.make_plan(n, k, 64, checksum=True)
+    idx = jnp.sort(jax.random.choice(jax.random.PRNGKey(0), n, (k,),
+                                     replace=False)).astype(jnp.int32)
+    vals = jax.random.normal(jax.random.PRNGKey(1), (k,))
+    pay = PK.encode_sparse(vals, idx, plan)
+    ok, bad = PK.validate_payload(pay, plan)
+    assert bool(ok) and int(bad) == 0
+    # one flipped bit in the int8 values: invisible to every structural
+    # predicate EXCEPT the checksum — the check that earns its +4 bytes
+    q_pos = len(pay) - 3
+    corrupt = list(pay)
+    corrupt[q_pos] = pay[q_pos].at[0].set(pay[q_pos][0] ^ 1)
+    ok, bad = PK.validate_payload(tuple(corrupt), plan)
+    assert not bool(ok) and int(bad) == 1
+    plain = PK.make_plan(n, k, 64)
+    pay_plain = PK.encode_sparse(vals, idx, plain)
+    ok, _ = PK.validate_payload(
+        tuple(a if i != q_pos - 1 else a.at[0].set(a[0] ^ 1)
+              for i, a in enumerate(pay_plain)), plain)
+    assert bool(ok)     # ...without the checksum, the same flip passes
+    # histogram corruption: counts no longer sum to k
+    corrupt = list(pay)
+    corrupt[0] = pay[0].at[0].add(3)
+    ok, bad = PK.validate_payload(tuple(corrupt), plan)
+    assert not bool(ok) and int(bad) >= 2      # checksum + histogram sum
+    # non-finite scale
+    corrupt = list(pay)
+    corrupt[-2] = pay[-2].at[0].set(jnp.nan)
+    ok, _ = PK.validate_payload(tuple(corrupt), plan)
+    assert not bool(ok)
+    # index-only payloads validate too (the support broadcast)
+    ipay = PK.encode_indices(idx, plan)
+    ok, bad = PK.validate_payload(ipay, plan, values=False)
+    assert bool(ok) and int(bad) == 0
+    ok, _ = PK.validate_payload(
+        (ipay[0].at[0].add(1),) + ipay[1:], plan, values=False)
+    assert not bool(ok)
+
+
+def test_validate_payload_raw_index_bounds_and_order():
+    n, k = 4096, 4                              # raw_index regime
+    plan = PK.make_plan(n, k, 64)
+    assert plan.raw_index
+    idx = jnp.asarray([1, 5, 9, 4095], jnp.int32)
+    vals = jnp.ones((k,))
+    pay = PK.encode_sparse(vals, idx, plan)
+    ok, bad = PK.validate_payload(pay, plan)
+    assert bool(ok) and int(bad) == 0
+    bad_idx = (jnp.asarray([[9, 5, 1, 4095]], jnp.int32)[0],) + pay[1:]
+    ok, _ = PK.validate_payload(bad_idx, plan)
+    assert not bool(ok)                         # non-monotone
+    oob = (jnp.asarray([1, 5, 9, n + 7], jnp.int32),) + pay[1:]
+    ok, _ = PK.validate_payload(oob, plan)
+    assert not bool(ok)                         # out of [0, n]
+
+
+def test_build_plan_carries_checksum_from_config():
+    from repro.dist import plan as XP
+    from repro.core import sparsify as SP
+    layout = SP.build_layout(PARAMS, sparsity=0.05)
+    for method in ("dgc", "lgc_rar"):
+        plain = XP.build_plan(_cc(method), layout, K,
+                              transport="ring_packed")
+        withc = XP.build_plan(_cc(method, guard_checksum=True), layout, K,
+                              transport="ring_packed")
+        packs_p = [op.pack for op in plain.ops if hasattr(op, "pack")
+                   and op.pack is not None]
+        packs_c = [op.pack for op in withc.ops if hasattr(op, "pack")
+                   and op.pack is not None]
+        assert packs_p and packs_c
+        assert all(not p.checksum for p in packs_p)
+        assert all(p.checksum for p in packs_c)
+        # the checksum is priced into the plan's own wire terms
+        wt_p = XP.wire_terms(plain, transport="ring_packed")
+        wt_c = XP.wire_terms(withc, transport="ring_packed")
+        assert sum(wt_c.values()) > sum(wt_p.values()), method
+
+
+# ---------------------------------------------------------------------------
+# the distributed chaos suite: all 6 methods on chaos:ring and
+# chaos:ring_packed vs the chaos:sim oracle under the IDENTICAL
+# seeded NaN/Inf spec (scrub + skip_round), plus a bit-flip finiteness
+# sweep — bit-flips yield *different finite values* per substrate (the
+# same flipped bit lands on quantization-perturbed floats), so the
+# oracle comparison uses the non-finite fault kinds the scrub maps to
+# identical zeros, and bit-flips are gated on finiteness + tally only.
+# This is the documented bound (DESIGN.md "Faults on the wire").
+
+
+def test_chaos_dist_transports_match_chaos_sim_oracle(subproc):
+    out = subproc("""
+import jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from repro.configs.base import CompressionConfig
+from repro.core import build_compressor
+from repro.core.phases import PHASE_COMPRESSED, PHASE_WARMUP, phase_for_step
+from repro.dist import chaos as CH
+
+params = {"embed": {"w": jnp.zeros((32, 16))},
+          "layer1": {"w": jnp.zeros((64, 64)), "b": jnp.zeros((64,))},
+          "layer2": {"w": jnp.zeros((64, 64))},
+          "lm_head": {"w": jnp.zeros((16, 32))}}
+K = 4
+TRANSPORTS = ("chaos:ring", "chaos:ring_packed")
+Q8_TOL = 2e-3
+mesh = jax.make_mesh((4,), ("data",),
+                     axis_types=(jax.sharding.AxisType.Auto,))
+
+FAULTS = dict(fault_seed=11, fault_nans=2, fault_infs=1)
+
+for guard in ("scrub", "skip_round"):
+    for method in ["none", "sparse_gd", "dgc", "lgc_rar", "lgc_rar_q8",
+                   "lgc_ps"]:
+        cc = CompressionConfig(method=method, sparsity=0.05,
+                               innovation_sparsity=0.005,
+                               warmup_steps=1, ae_train_steps=2,
+                               guard=guard, guard_checksum=True,
+                               **FAULTS)
+        comp = build_compressor(cc, params, K)
+        n = comp.layout.n_total
+        base = comp.init_state(jax.random.PRNGKey(0))
+        ae_keys = tuple(k for k in ("ae", "ae_mom") if k in base)
+
+        def dist_fn(step, phase, transport):
+            def inner(uv, ae_part, g):
+                state = {"u": uv["u"][0], "v": uv["v"][0], **ae_part}
+                gg, ns, _ = comp.dist_step(state, g[0], step, phase,
+                                           ("data",),
+                                           transport=transport)
+                return (gg, {"u": ns["u"][None], "v": ns["v"][None]},
+                        {k: ns[k] for k in ae_part})
+            return jax.jit(jax.shard_map(
+                inner, mesh=mesh,
+                in_specs=({"u": P("data"), "v": P("data")}, P(),
+                          P("data")),
+                out_specs=(P(), {"u": P("data"), "v": P("data")}, P()),
+                axis_names={"data"}, check_vma=False))
+
+        sim_states = comp.init_sim_states(jax.random.PRNGKey(0))
+        uvs = {t: {"u": jnp.zeros((K, n)), "v": jnp.zeros((K, n))}
+               for t in TRANSPORTS}
+        aes = {t: {k: base[k] for k in ae_keys} for t in TRANSPORTS}
+        rng = jax.random.PRNGKey(1)
+        tol = 1e-3 if method.startswith("lgc") else 1e-5
+        saw_fault = False
+        for step in range(5):
+            rng, k2 = jax.random.split(rng)
+            g = jax.random.normal(k2, (K, n)) * 0.01
+            phase = phase_for_step(step, cc)
+            CH.reset_fault_tally()
+            g_sim, sim_states, stats_sim = comp.sim_step(
+                sim_states, g, step, phase)
+            rep = CH.fault_report()
+            assert rep and all(set(v) <= {"nan", "inf"}
+                               for v in rep.values()), rep
+            saw_fault |= int(stats_sim["guard_ok"]) == 0
+            assert bool(jnp.all(jnp.isfinite(g_sim))), (method, step)
+            for t in TRANSPORTS:
+                gg, uvs[t], aes[t] = dist_fn(step, phase, t)(
+                    uvs[t], aes[t], g)
+                assert bool(jnp.all(jnp.isfinite(gg))), (method, t, step)
+                quantized = (t.endswith("ring_packed")
+                             and phase != PHASE_WARMUP
+                             and method in ("sparse_gd", "dgc", "lgc_ps"))
+                g_tol = Q8_TOL if quantized else tol
+                err = float(jnp.max(jnp.abs(g_sim - gg)))
+                assert err < g_tol, (guard, method, t, step, phase, err)
+                err_v = float(jnp.max(jnp.abs(sim_states["v"]
+                                              - uvs[t]["v"])))
+                assert err_v < tol, (guard, method, t, step, err_v)
+        assert saw_fault, (guard, method)
+        print(guard, method, "OK")
+print("PASS")
+""", devices=4, timeout=1800)
+    assert "PASS" in out
+
+
+def test_chaos_bitflips_scrubbed_finite_on_real_wires(subproc):
+    out = subproc("""
+import jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from repro.configs.base import CompressionConfig
+from repro.core import build_compressor
+from repro.core.phases import phase_for_step
+from repro.dist import chaos as CH
+
+params = {"embed": {"w": jnp.zeros((32, 16))},
+          "layer1": {"w": jnp.zeros((64, 64)), "b": jnp.zeros((64,))},
+          "layer2": {"w": jnp.zeros((64, 64))},
+          "lm_head": {"w": jnp.zeros((16, 32))}}
+K = 4
+mesh = jax.make_mesh((4,), ("data",),
+                     axis_types=(jax.sharding.AxisType.Auto,))
+
+for method in ("dgc", "lgc_rar_q8"):
+    cc = CompressionConfig(method=method, sparsity=0.05,
+                           warmup_steps=1, ae_train_steps=2,
+                           guard="scrub", guard_checksum=True,
+                           fault_seed=5, fault_bitflips=4)
+    comp = build_compressor(cc, params, K)
+    n = comp.layout.n_total
+    base = comp.init_state(jax.random.PRNGKey(0))
+    ae_keys = tuple(k for k in ("ae", "ae_mom") if k in base)
+    transport = "chaos:ring_packed" if method == "dgc" else "chaos:ring_q8"
+
+    def dist_fn(step, phase):
+        def inner(uv, ae_part, g):
+            state = {"u": uv["u"][0], "v": uv["v"][0], **ae_part}
+            gg, ns, stats = comp.dist_step(state, g[0], step, phase,
+                                           ("data",), transport=transport)
+            return (gg, {"u": ns["u"][None], "v": ns["v"][None]},
+                    {k: ns[k] for k in ae_part})
+        return jax.jit(jax.shard_map(
+            inner, mesh=mesh,
+            in_specs=({"u": P("data"), "v": P("data")}, P(), P("data")),
+            out_specs=(P(), {"u": P("data"), "v": P("data")}, P()),
+            axis_names={"data"}, check_vma=False))
+
+    uv = {"u": jnp.zeros((K, n)), "v": jnp.zeros((K, n))}
+    ae = {k: base[k] for k in ae_keys}
+    rng = jax.random.PRNGKey(1)
+    CH.reset_fault_tally()
+    for step in range(5):
+        rng, k2 = jax.random.split(rng)
+        g = jax.random.normal(k2, (K, n)) * 0.01
+        gg, uv, ae = dist_fn(step, phase_for_step(step, cc))(uv, ae, g)
+        assert bool(jnp.all(jnp.isfinite(gg))), (method, step)
+        assert bool(jnp.all(jnp.isfinite(uv["v"]))), (method, step)
+    rep = CH.fault_report()
+    assert rep and all(set(v) == {"bitflip"} for v in rep.values()), rep
+    print(method, "OK", rep)
+print("PASS")
+""", devices=4, timeout=1800)
+    assert "PASS" in out

@@ -1,0 +1,107 @@
+"""Quantizer edge cases: the inputs a fault-injected wire actually
+produces.  The hardened :func:`repro.dist.quantize.quantize_i8` must
+never emit a non-finite scale or value — a NaN element would otherwise
+poison its whole block's ``max|x|`` scale and, through the ring's
+partial sums, every downstream node — and must stay bit-identical to
+the historical path on finite inputs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.dist import chaos as CH
+from repro.dist.quantize import (dequantize_i8, fake_quantize,
+                                 quantize_i8, wire_nbytes)
+
+
+def _finite(x):
+    return bool(jnp.all(jnp.isfinite(x)))
+
+
+def test_all_zero_block_quantizes_to_zero():
+    x = jnp.zeros((512,))
+    q, scales = quantize_i8(x, 256)
+    assert _finite(scales) and bool(jnp.all(q == 0))
+    np.testing.assert_array_equal(np.asarray(fake_quantize(x, 256)),
+                                  np.zeros(512, np.float32))
+
+
+def test_mixed_zero_and_live_blocks():
+    x = jnp.concatenate([jnp.zeros((256,)),
+                         jnp.full((256,), 3.0),
+                         jnp.zeros((256,))])
+    out = fake_quantize(x, 256)
+    assert _finite(out)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(x), atol=3/127)
+
+
+def test_nan_and_inf_elements_quantize_to_zero():
+    x = jnp.asarray([1.0, jnp.nan, -2.0, jnp.inf, 0.5, -jnp.inf, 3.0, 0.0])
+    q, scales = quantize_i8(x, 4)
+    assert _finite(scales)
+    out = dequantize_i8(q, scales, x.size)
+    assert _finite(out)
+    # the non-finite coordinates land at exactly zero...
+    np.testing.assert_array_equal(np.asarray(out)[[1, 3, 5]], 0.0)
+    # ...and the finite ones survive with ordinary quantization error
+    keep = np.asarray([0, 2, 4, 6, 7])
+    np.testing.assert_allclose(np.asarray(out)[keep], np.asarray(x)[keep],
+                               atol=3 / 127)
+
+
+def test_all_nonfinite_block():
+    x = jnp.full((256,), jnp.nan)
+    out = fake_quantize(x, 256)
+    np.testing.assert_array_equal(np.asarray(out), np.zeros(256, np.float32))
+
+
+def test_subnormal_max_block_does_not_overflow():
+    # a block whose max|x| is subnormal: max/127 underflows toward zero,
+    # and without the _EPS floor x/scale would blow up or 0/0-NaN
+    tiny = np.float32(1e-40)
+    x = jnp.asarray(np.full(256, tiny, np.float32))
+    q, scales = quantize_i8(x, 256)
+    assert _finite(scales)
+    out = fake_quantize(x, 256)
+    assert _finite(out)
+    assert float(jnp.max(jnp.abs(out))) <= 1e-6
+
+
+def test_fake_quantize_never_nan_random_sweep():
+    rng = jax.random.PRNGKey(0)
+    for scale in (1e-42, 1e-20, 1.0, 1e20, 1e38):
+        rng, k = jax.random.split(rng)
+        x = jax.random.normal(k, (1000,)) * scale
+        assert _finite(fake_quantize(x, 128)), scale
+
+
+def test_finite_inputs_bit_identical_to_unhardened_path():
+    # the hardening is a mask that must not perturb finite inputs: the
+    # where(nonfinite, 0, x) is the identity there, so q/scales match a
+    # hand-computed unmasked reference exactly
+    x = jax.random.normal(jax.random.PRNGKey(3), (777,)) * 0.37
+    q, scales = quantize_i8(x, 256)
+    flat = np.zeros(1024, np.float32)
+    flat[:777] = np.asarray(x, np.float32)
+    xb = flat.reshape(-1, 256)
+    ref_scales = np.maximum(np.abs(xb).max(axis=1), 1e-12) / 127.0
+    ref_q = np.clip(np.round(xb / ref_scales[:, None]), -127, 127)
+    np.testing.assert_array_equal(np.asarray(scales), ref_scales)
+    np.testing.assert_array_equal(np.asarray(q), ref_q.astype(np.int8))
+
+
+def test_nonfinite_count_reported_to_structural_sink():
+    x = jnp.asarray([1.0, jnp.nan, jnp.inf, -jnp.inf, 2.0] + [0.0] * 3)
+    sink = []
+    with CH.structural_sink(sink):
+        quantize_i8(x, 4)
+    assert len(sink) == 1 and int(sink[0]) == 3
+    # no sink open -> no reporting side channel
+    sink2 = []
+    quantize_i8(x, 4)
+    assert not sink2
+
+
+def test_wire_nbytes_counts_padding_and_scales():
+    assert wire_nbytes(256, 256) == 256 + 4
+    assert wire_nbytes(257, 256) == 512 + 8
+    assert wire_nbytes(1, 256) == 256 + 4

@@ -1,0 +1,152 @@
+"""Crash-resume: the checkpoint restores the FULL train state —
+params, optimizer moments, and the compressor's EF residuals — so a
+killed-and-resumed run's loss trajectory is BIT-IDENTICAL to an
+uninterrupted one.  ``u``/``v`` are load-bearing: a resume that dropped
+them would silently lose every gradient coordinate currently parked in
+the error-feedback accumulators and the trajectories would diverge from
+the first compressed step.
+
+The kill is a real SIGKILL on a real driver subprocess mid-run — not a
+graceful exit — so the test exercises exactly the crash the checkpoint
+format exists for."""
+import json
+import os
+import signal
+import subprocess
+import sys
+import time
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import (CheckpointError, load_checkpoint,
+                              save_checkpoint)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+TRAIN_ARGS = ["--arch", "llama3.2-1b", "--smoke", "--batch", "4",
+              "--seq", "64", "--compression", "lgc_rar",
+              "--warmup-steps", "2", "--ae-train-steps", "3",
+              "--data-shards", "2", "--transport", "ring",
+              "--log-every", "1"]
+STEPS = 14
+
+
+def _train(extra, env):
+    return subprocess.Popen(
+        [sys.executable, "-m", "repro.launch.train"] + TRAIN_ARGS + extra,
+        env=env, stdout=subprocess.PIPE, stderr=subprocess.STDOUT,
+        text=True)
+
+
+def _ckpt_step(path):
+    try:
+        with np.load(path) as z:
+            return int(z["__step__"])
+    except Exception:       # mid-replace / not yet written
+        return -1
+
+
+def test_kill_and_resume_bit_identical_loss_trajectory(tmp_path):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+
+    # reference: one uninterrupted run
+    ref_json = str(tmp_path / "ref.json")
+    proc = _train(["--steps", str(STEPS), "--metrics-out", ref_json], env)
+    out, _ = proc.communicate(timeout=900)
+    assert proc.returncode == 0, out[-4000:]
+
+    # victim: same run, periodic checkpoints, SIGKILLed once a periodic
+    # checkpoint materializes (atomic rename -> reading it is safe)
+    vdir = tmp_path / "victim"
+    ckpt = str(vdir / "ckpt.npz")
+    victim = _train(["--steps", str(STEPS), "--checkpoint-dir", str(vdir),
+                     "--checkpoint-every", "3"], env)
+    deadline = time.time() + 600
+    try:
+        while _ckpt_step(ckpt) < 4:
+            if victim.poll() is not None:
+                out, _ = victim.communicate()
+                raise AssertionError(
+                    f"victim exited before it could be killed:\n"
+                    f"{out[-4000:]}")
+            assert time.time() < deadline, "no periodic checkpoint"
+            time.sleep(0.2)
+        victim.send_signal(signal.SIGKILL)
+    finally:
+        victim.wait(timeout=60)
+    start = _ckpt_step(ckpt)
+    assert 4 <= start < STEPS, start
+
+    # resume from the crash checkpoint to the same final step
+    res_json = str(tmp_path / "res.json")
+    proc = _train(["--steps", str(STEPS), "--resume", ckpt,
+                   "--metrics-out", res_json], env)
+    out, _ = proc.communicate(timeout=900)
+    assert proc.returncode == 0, out[-4000:]
+
+    ref = {h["step"]: h["loss"] for h in json.load(open(ref_json))}
+    res = {h["step"]: h["loss"] for h in json.load(open(res_json))}
+    assert res, "resumed run logged nothing"
+    assert min(res) == start and max(res) == STEPS - 1
+    # the contract: not close — EQUAL, bit for bit, step for step
+    for step, loss in sorted(res.items()):
+        assert ref[step] == loss, (step, ref[step], loss)
+    # the resume crossed into (or through) the compressed phase, so the
+    # EF residuals and autoencoder state in comp_state did real work
+    assert start < STEPS - 1
+
+
+# ---------------------------------------------------------------------------
+# load_checkpoint error contract: CheckpointError with the offending
+# key, never a bare KeyError/assert
+
+
+def _tree():
+    return {"params": {"w": jnp.ones((2, 3))},
+            "opt_state": {"m": jnp.zeros((2, 3))},
+            "comp_state": {"u": jnp.zeros((5,))}}
+
+
+def test_load_checkpoint_missing_key_names_it(tmp_path):
+    path = str(tmp_path / "old.npz")
+    tree = _tree()
+    save_checkpoint(path, {"params": tree["params"]}, 7)   # pre-full-state
+    with pytest.raises(CheckpointError) as ei:
+        load_checkpoint(path, tree)
+    msg = str(ei.value)
+    assert "full-state" in msg and "opt_state" in msg or "comp_state" in msg
+    assert path in msg
+
+
+def test_load_checkpoint_not_a_checkpoint(tmp_path):
+    path = str(tmp_path / "junk.npz")
+    np.savez(path, foo=np.zeros(3))
+    with pytest.raises(CheckpointError, match="__step__"):
+        load_checkpoint(path, _tree())
+
+
+def test_load_checkpoint_shape_mismatch_names_key_and_shapes(tmp_path):
+    path = str(tmp_path / "ck.npz")
+    tree = _tree()
+    save_checkpoint(path, tree, 3)
+    other = _tree()
+    other["comp_state"]["u"] = jnp.zeros((9,))
+    with pytest.raises(CheckpointError) as ei:
+        load_checkpoint(path, other)
+    msg = str(ei.value)
+    assert "comp_state" in msg and "(5,)" in msg and "(9,)" in msg
+
+
+def test_load_checkpoint_roundtrips_full_state(tmp_path):
+    path = str(tmp_path / "ck.npz")
+    tree = _tree()
+    save_checkpoint(path, tree, 11)
+    restored, step = load_checkpoint(path, tree)
+    assert step == 11
+    for a, b in zip(jnp.ravel(tree["comp_state"]["u"]),
+                    jnp.ravel(restored["comp_state"]["u"])):
+        assert a == b
