@@ -9,7 +9,11 @@ ROADMAP tracks PR-over-PR.
 Doubles as a correctness gate (run by scripts/ci.sh): every kernel
 backend's global gradient and accumulator states are compared against
 the jnp oracle over the full phase schedule and the process exits
-nonzero if any divergence exceeds 1e-5.
+nonzero if any divergence exceeds 1e-5.  The ``packed_encode`` rows
+gate the one-launch fused packed-wire encode (bit-exact vs the composed
+quantize->pack path, pallas_call count jaxpr-asserted == 1) and record
+the ``--wire-buckets`` overlapped-exchange pricing (per-node wire bytes
++ explicit padding overhead at that pipeline depth).
 
 Timings default to interpret-mode on CPU, so the *absolute* numbers are
 structural (launch counts, pass structure), not TPU wall-clock; the
@@ -74,9 +78,91 @@ def run_method(method: str, backend: str, ae_backend: str = "jnp",
     return jnp.stack(gs), states["u"], states["v"], us
 
 
+def _count_pallas(jaxpr) -> int:
+    """Recursive ``pallas_call`` count through pjit/scan sub-jaxprs —
+    the launch-structure metric the fused-encode rows record."""
+    def subs(v):
+        if hasattr(v, "jaxpr"):                    # ClosedJaxpr
+            return [v.jaxpr]
+        if hasattr(v, "eqns"):                     # Jaxpr
+            return [v]
+        if isinstance(v, (list, tuple)):
+            return [j for x in v for j in subs(x)]
+        return []
+    n = 0
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "pallas_call":
+            n += 1
+        for v in eqn.params.values():
+            for sub in subs(v):
+                n += _count_pallas(sub)
+    return n
+
+
+def packed_encode_rows(report, wire_buckets, interpret=True):
+    """The packed-wire encode collapsed into ONE kernel: time the
+    composed multi-pass path (block-quantize, then bit-plane pack —
+    separate HBM round-trips) against ``packed.encode_sparse_fused``,
+    record the jaxpr-counted pallas_call launches for both (the fused
+    path MUST be exactly 1: one HBM read of (vals, idx) per bucket),
+    gate bit-exactness, and price a dgc/ring_packed plan's wire bytes
+    at ``--wire-buckets`` — per-bucket totals plus the explicitly
+    priced bucket/chunk padding overhead.  Returns False on any gate
+    miss (main() turns that into a nonzero exit)."""
+    from repro.dist import packed as PK
+    from repro.dist import plan as XP
+
+    layout = build_layout(PARAMS, 0.02)
+    n, k = layout.n_total, layout.mu_pad
+    pack = PK.make_plan(n, k, 256)
+
+    def composed(v, i):
+        return PK.encode_sparse(v, i, pack, interpret=interpret)
+
+    def fused(v, i):
+        return PK.encode_sparse_fused(v, i, pack, interpret=interpret)
+
+    idx = jnp.sort(jax.random.choice(jax.random.PRNGKey(3), n, (k,),
+                                     replace=False).astype(jnp.int32))
+    vals = jax.random.normal(jax.random.PRNGKey(4), (k,))
+    ref, got = composed(vals, idx), fused(vals, idx)
+    bitwise = all(bool(jnp.all(a == b)) for a, b in zip(ref, got))
+    launches = {name: _count_pallas(jax.make_jaxpr(f)(vals, idx).jaxpr)
+                for name, f in (("composed", composed), ("fused", fused))}
+    us_c = time_call(jax.jit(composed), vals, idx)
+    us_f = time_call(jax.jit(fused), vals, idx)
+    row("step_latency/packed_encode_composed", us_c,
+        f"pallas_launches={launches['composed']} (quantize+pack passes)")
+    row("step_latency/packed_encode_fused", us_f,
+        f"pallas_launches={launches['fused']} "
+        f"bit_exact={'yes' if bitwise else 'NO'}")
+    entry = {"k": int(k), "bit_exact": bitwise, "launches": launches,
+             "us_composed": round(us_c, 1), "us_fused": round(us_f, 1)}
+
+    xplan = XP.build_plan(
+        CompressionConfig(method="dgc", sparsity=0.02,
+                          transport="ring_packed",
+                          wire_buckets=wire_buckets), layout, K)
+    entry["wire_buckets"] = {}
+    for wb in sorted({1, wire_buckets}):
+        total = sum(XP.wire_terms(xplan, wire_buckets=wb).values())
+        pad = sum(XP.padding_overhead_terms(xplan,
+                                            wire_buckets=wb).values())
+        row(f"step_latency/wire_buckets_{wb}", 0.0,
+            f"bytes/node={int(total)} pad={int(pad)} (dgc/ring_packed)")
+        entry["wire_buckets"][str(wb)] = {"bytes_per_node": total,
+                                          "padding": pad}
+    report["packed_encode"] = entry
+    return bitwise and launches["fused"] == 1
+
+
 def main(argv=None):
     p = argparse.ArgumentParser(description=__doc__)
     p.add_argument("--out", default="BENCH_step_latency.json")
+    p.add_argument("--wire-buckets", type=int, default=4,
+                   help="bucket count for the overlapped-exchange "
+                        "pricing rows (wire bytes + padding at this "
+                        "pipeline depth vs unbucketed)")
     p.add_argument("--compiled", action="store_true",
                    help="compile the Pallas kernels (drop interpret=True)"
                         " when a real accelerator is present; on CPU the "
@@ -142,6 +228,12 @@ def main(argv=None):
             if err > TOL:
                 failures.append((method, label, err))
         report["methods"][method] = entry
+
+    if not packed_encode_rows(report, args.wire_buckets,
+                              interpret=interpret):
+        failures.append(("packed_encode",
+                         report["packed_encode"]["launches"],
+                         report["packed_encode"]["bit_exact"]))
 
     with open(args.out, "w") as f:
         json.dump(report, f, indent=1)

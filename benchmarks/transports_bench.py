@@ -16,10 +16,14 @@ a fake-4-device subprocess that exercises EVERY distributed transport in
                             the documented q8 bound); float wires stay
                             exact, so only ring_packed runs opt into it
 
-Exits nonzero on any divergence — run by scripts/ci.sh.  Also prints the
-per-op wire trace (``wire_report(by_op=True)``): which exchange-plan op
-moved which bytes through which collective, gated against the plan
-pricer's ``wire_terms_by_op`` (the op-level wire contract).  The measured
+Exits nonzero on any divergence — run by scripts/ci.sh.  The gate runs
+both the historical unbucketed schedule and one overlapped bucketed
+configuration (``wire_buckets=3`` — bucket b's ring hops overlap bucket
+b+1's encode) through every transport.  Also prints the per-op wire
+trace (``wire_report(by_op=True)``): which exchange-plan op moved which
+bytes through which collective — including the per-bucket ``op#b<i>``
+rows of a bucketed lowering — gated against the plan pricer's
+``wire_terms_by_op`` (the op-level wire contract).  The measured
 ring wire bytes are reported against the analytic all-reduce bound
 (derived column = per-node wire bytes, the quantity the paper's Tables
 IV/VI are about), and the packed sparse exchange is gated at <= 0.35x of
@@ -225,7 +229,10 @@ def plan_trace_rows():
     the packed wire and print where every byte went, by exchange-plan op
     label (``collectives.wire_report(by_op=True)``).  CI-gates that the
     measured per-op tally equals the plan pricer's ``wire_terms_by_op``
-    — the op-level refinement of the aggregate wire contract."""
+    — the op-level refinement of the aggregate wire contract.  The
+    ``wb3`` configs repeat the lowering with ``wire_buckets=3``: the
+    tally then carries one ``op#b<i>`` row per pipeline bucket and must
+    still match the pricer row for row."""
     code = """
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import PartitionSpec as P
@@ -241,11 +248,13 @@ params = {"embed": {"w": jnp.zeros((32, 16))},
 K = 4
 mesh = jax.make_mesh((K,), ("data",),
                      axis_types=(jax.sharding.AxisType.Auto,))
-for method in ("dgc", "lgc_rar_q8", "lgc_ps"):
+for method, wb in (("dgc", 1), ("lgc_rar_q8", 1), ("lgc_ps", 1),
+                   ("dgc", 3), ("lgc_rar_q8", 3)):
     transport = "ring_q8" if method == "lgc_rar_q8" else "ring_packed"
     cc = CompressionConfig(method=method, sparsity=0.05,
                            innovation_sparsity=0.005, warmup_steps=1,
-                           ae_train_steps=2, transport=transport)
+                           ae_train_steps=2, transport=transport,
+                           wire_buckets=wb)
     comp = build_compressor(cc, params, K)
     n = comp.layout.n_total
     base = comp.init_state(jax.random.PRNGKey(0))
@@ -277,8 +286,10 @@ for method in ("dgc", "lgc_rar_q8", "lgc_ps"):
             assert np.isclose(measured[label].get(kind, 0),
                               priced[label].get(kind, 0), rtol=1e-9), (
                 method, label, kind)
+    if wb > 1:
+        assert any("#b" in lbl for lbl in measured), (method, measured)
     for label, terms in measured.items():
-        print("TRACE", method, transport, label,
+        print("TRACE", f"{method}@wb{wb}", transport, label,
               "+".join(sorted(terms)), int(sum(terms.values())))
 print("TRACE-PASS")
 """
@@ -317,10 +328,15 @@ K = 4
 Q8_TOL, EXACT_TOL = {Q8_TOL}, {EXACT_TOL}
 mesh = jax.make_mesh((K,), ("data",),
                      axis_types=(jax.sharding.AxisType.Auto,))
-for method in ("dgc", "lgc_rar", "lgc_rar_q8", "lgc_ps"):
+for method, wb in (("dgc", 1), ("lgc_rar", 1), ("lgc_rar_q8", 1),
+                   ("lgc_ps", 1), ("dgc", 3)):
+    # the wb=3 run drives the SAME method through the overlapped
+    # bucketed schedule on every transport — the pipelined executor
+    # must clear the identical oracle gate as the unbucketed one
     cc = CompressionConfig(method=method, sparsity=0.05,
                            innovation_sparsity=0.005,
-                           warmup_steps=1, ae_train_steps=2)
+                           warmup_steps=1, ae_train_steps=2,
+                           wire_buckets=wb)
     comp = build_compressor(cc, params, K)
     n = comp.layout.n_total
     base = comp.init_state(jax.random.PRNGKey(0))
@@ -367,7 +383,7 @@ for method in ("dgc", "lgc_rar", "lgc_rar_q8", "lgc_ps"):
         # single-axis hierarchy IS the ring schedule: bit-identical
         assert bool(jnp.all(outs["ring_hier"] == outs["ring"])), (
             method, step)
-    print("GATE", method,
+    print("GATE", method + (f"_wb{{wb}}" if wb > 1 else ""),
           " ".join(f"{{t}}={{worst[t]:.2e}}" for t in transports))
 print("GATE-PASS")
 """

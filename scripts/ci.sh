@@ -4,7 +4,8 @@
 # tests, kernel micro-bench (loop vs
 # bitonic extraction rows, exact-gated, written to BENCH_kernels.json),
 # the step-latency bench (perf trajectory + fused-vs-jnp 1e-5 gate), the
-# transport gate (every transport in TRANSPORTS vs the Sim oracle:
+# transport gate (every transport in TRANSPORTS vs the Sim oracle,
+# unbucketed AND one wire_buckets=3 overlapped configuration:
 # mesh/ring/ring_hier exact, ring_q8 at the quantization tolerance), a
 # big-k bitonic fused-sweep gate (k > 16Ki, where the loop extractor is
 # infeasible), and the end-to-end LGC train smoke on 2 fake devices
@@ -143,6 +144,12 @@ python -m repro.launch.train --arch llama3.2-1b --smoke --steps 12 \
 python -m repro.launch.train --arch llama3.2-1b --smoke --steps 12 \
     --batch 4 --seq 64 --compression dgc --warmup-steps 2 \
     --data-shards 2 --transport ring_packed
+# the overlapped bucketed exchange end-to-end: the same packed wire
+# with compression pipelined under the ring hops (--wire-buckets 3:
+# bucket b circulates while bucket b+1 encodes)
+python -m repro.launch.train --arch llama3.2-1b --smoke --steps 12 \
+    --batch 4 --seq 64 --compression dgc --warmup-steps 2 \
+    --data-shards 2 --transport ring_packed --wire-buckets 3
 # multi-axis dp from the driver: ring_hier's intra/inter-pod schedule on
 # a real (pod x data x model) host mesh via --pod-shards
 python -m repro.launch.train --arch llama3.2-1b --smoke --steps 12 \

@@ -191,6 +191,15 @@ class CompressionConfig:
     # (0 = one message per hop; bytes are unchanged either way)
     ring_intra_chunk: int = 0
     ring_inter_chunk: int = 0
+    # bucketed, double-buffered exchange schedule: split every ring
+    # exchange into this many buckets and software-pipeline them —
+    # bucket b's ppermute hops issue while bucket b+1 encodes
+    # (quantize/pack), so compression compute overlaps network time
+    # instead of adding to it (see DESIGN.md "The overlapped
+    # exchange").  1 = the historical unbucketed schedule.  Float
+    # wires are bit-identical at any bucket count; the int8 wires
+    # re-block their scale groups per bucket (documented q8 bound).
+    wire_buckets: int = 1
     # residual top-k selection backend: "jnp" (lax.top_k reference),
     # "pallas" (kernels/ops.global_topk, one launch per leaf) or "fused"
     # (the single-sweep segmented kernel: EF accumulate + per-leaf

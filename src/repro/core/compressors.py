@@ -482,7 +482,8 @@ class GradientCompressor:
                            intra_chunk=self.cc.ring_intra_chunk,
                            inter_chunk=self.cc.ring_inter_chunk,
                            interpret=self.cc.topk_interpret,
-                           guard=self.cc.guard, fault=spec)
+                           guard=self.cc.guard,
+                           wire_buckets=self.cc.wire_buckets, fault=spec)
         return self.step(t, state, g, step, phase)
 
     def sim_step(self, states, g_nodes: jnp.ndarray, step, phase: str):

@@ -276,6 +276,10 @@ class ChaosTransport:
     def guard(self):
         return self.base.guard
 
+    @property
+    def wire_buckets(self):
+        return getattr(self.base, "wire_buckets", 1)
+
     def pernode(self, fn, in_axes=0):
         return self.base.pernode(fn, in_axes)
 

@@ -186,6 +186,74 @@ def _ppermute_chunked(x, axis, perm, max_elems: Optional[int] = None):
     return jnp.concatenate(pieces)
 
 
+def bucket_widths(c: int, n_buckets: int):
+    """The bucket split rule shared by the executor and the pricers:
+    ``c`` payload columns under a requested ``n_buckets`` -> (B, cb) —
+    ``B`` equal buckets of ``cb`` columns each (the payload is padded to
+    ``B*cb``).  ``cb = ceil(c / min(n_buckets, c))`` and then
+    ``B = ceil(c / cb)`` drops all-padding buckets, so every bucket
+    carries at least one real column and the shapes stay static/equal
+    (the ``lax.fori`` pipeline requirement).  B == 1 means "don't
+    bucket" — callers take the historical unbucketed path bit for bit."""
+    if c <= 0:
+        return 1, c
+    B0 = max(1, min(int(n_buckets), c))
+    cb = -(-c // B0)
+    return -(-c // cb), cb
+
+
+def _record_bucket_bytes(kind: str, nbytes: float, bucket: int) -> None:
+    """Per-bucket trace-time recording: bytes land in the global
+    per-kind tally as usual, but the per-op row is the active op label
+    suffixed ``#b<bucket>`` — the labels ``wire_terms_by_op`` predicts
+    for a bucketed plan.  Recording happens HOST-side, outside the
+    ``lax.fori`` pipeline body (whose trace runs once, not once per
+    bucket), which is why every bucketed collective records its B
+    buckets in a plain Python loop before issuing the pipeline."""
+    label = current_wire_op()
+    if label is None:
+        record_wire_bytes(kind, nbytes)
+        return
+    with wire_op(f"{label}#b{bucket}"):
+        record_wire_bytes(kind, nbytes)
+
+
+def _sw_pipeline(B: int, prep, move, out_shapes):
+    """The software pipeline driving every bucketed collective: one
+    ``lax.fori_loop`` over buckets in which iteration ``b`` issues
+    ``move(staged_b)`` (the bucket's ppermute hop chain) alongside
+    ``nxt = prep(b+1)`` (the NEXT bucket's encode / reduce-scatter) —
+    the two are data-independent inside the body, which is exactly the
+    freedom XLA needs to overlap compression compute with wire time.
+
+    prologue   staged = prep(0)
+    body b     nxt = prep(b+1); out[b] = move(staged); staged = nxt
+    epilogue   out[B-1] = move(staged)
+
+    Every prep and every move runs exactly once (no wasted hops).
+    ``prep(b)`` takes a (possibly traced) bucket index; ``move`` maps
+    the staged pytree to a result pytree shaped like ``out_shapes``
+    (a pytree of ShapeDtypeStruct for ONE bucket).  Returns the results
+    stacked on a new leading (B,) axis."""
+    tmap = jax.tree_util.tree_map
+    if B == 1:
+        return tmap(lambda a: a[None], move(prep(0)))
+    bufs = tmap(lambda s: jnp.zeros((B,) + s.shape, s.dtype), out_shapes)
+
+    def body(b, carry):
+        staged, bufs = carry
+        nxt = prep(b + 1)
+        res = move(staged)
+        bufs = tmap(lambda buf, r: jax.lax.dynamic_update_index_in_dim(
+            buf, r, b, 0), bufs, res)
+        return nxt, bufs
+
+    staged, bufs = jax.lax.fori_loop(0, B - 1, body, (prep(0), bufs))
+    res = move(staged)
+    return tmap(lambda buf, r: jax.lax.dynamic_update_index_in_dim(
+        buf, r, B - 1, 0), bufs, res)
+
+
 def _ring_reduce_scatter(chunks, axis, i, K, max_chunk_elems=None):
     """(K-1) forward hops; returns this node's fully-reduced chunk —
     node i ends up owning chunk (i+1) mod K."""
@@ -215,14 +283,29 @@ def _ring_all_gather(send, axis, i, K, max_chunk_elems=None):
 
 def ring_allreduce(x: jnp.ndarray, axis: str, op: str = "add",
                    max_chunk_elems: Optional[int] = None,
-                   kind: str = "ring_allreduce") -> jnp.ndarray:
+                   kind: Optional[str] = "ring_allreduce",
+                   n_buckets: int = 1) -> jnp.ndarray:
     """Chunked ring allreduce of ``x`` over manual mesh axis ``axis``.
 
     Must run inside a shard_map that binds ``axis`` manually.  Works for
     any shape (flattened internally, zero-padded to a multiple of K).
     ``op``: "add" or "mean".  ``max_chunk_elems`` splits each hop's
     payload into multiple ppermute messages (bytes unchanged); ``kind``
-    is the wire-tally key (the hierarchical ring relabels its stages).
+    is the wire-tally key (the hierarchical ring relabels its stages;
+    ``None`` suppresses recording — a pipelined caller that already
+    recorded the bytes host-side).  ``n_buckets`` > 1 splits the (K, c)
+    chunk matrix into :func:`bucket_widths` column buckets and software-
+    pipelines them (:func:`_sw_pipeline`): bucket b's all-gather hops
+    issue while bucket b+1 reduce-scatters.  Columns keep their row
+    (node-accumulation order), so the result is BIT-identical to the
+    unbucketed schedule at any bucket count — given identical input
+    bits reaching the ring.  (One backend caveat: when the input is a
+    bare multiply fused into this jit — in practice only the q8
+    fake-dequant — the CPU backend FMA-contracts it into the first
+    reduce-scatter add differently across program shapes, a ~1 ULP
+    effect outside the schedule; see DESIGN.md "The overlapped
+    exchange".)  The only byte cost is the bucket-pad columns (priced
+    per bucket, see ``plan.padding_overhead_terms``).
     """
     assert op in ("add", "mean"), op
     K = jax.lax.axis_size(axis)
@@ -230,22 +313,45 @@ def ring_allreduce(x: jnp.ndarray, axis: str, op: str = "add",
         return x
     i = jax.lax.axis_index(axis)
     chunks, n = _to_chunks(x, K)
-    record_wire_bytes(
-        kind, 2 * (K - 1) * chunks.shape[1] * jnp.dtype(x.dtype).itemsize)
-    send = _ring_reduce_scatter(chunks, axis, i, K, max_chunk_elems)
-    out = _ring_all_gather(send, axis, i, K, max_chunk_elems)
-    res = out.reshape(-1)[:n].reshape(x.shape)
+    c = chunks.shape[1]
+    isz = jnp.dtype(x.dtype).itemsize
+    B, cb = bucket_widths(c, n_buckets)
+    if B == 1:
+        if kind is not None:
+            record_wire_bytes(kind, 2 * (K - 1) * c * isz)
+        send = _ring_reduce_scatter(chunks, axis, i, K, max_chunk_elems)
+        out = _ring_all_gather(send, axis, i, K, max_chunk_elems)
+        res = out.reshape(-1)[:n].reshape(x.shape)
+        return res / K if op == "mean" else res
+    if B * cb > c:
+        chunks = jnp.pad(chunks, ((0, 0), (0, B * cb - c)))
+    if kind is not None:
+        for b in range(B):
+            _record_bucket_bytes(kind, 2 * (K - 1) * cb * isz, b)
+
+    def prep(b):
+        blk = jax.lax.dynamic_slice_in_dim(chunks, b * cb, cb, axis=1)
+        return _ring_reduce_scatter(blk, axis, i, K, max_chunk_elems)
+
+    def move(send):
+        return _ring_all_gather(send, axis, i, K, max_chunk_elems)
+
+    tables = _sw_pipeline(B, prep, move,
+                          jax.ShapeDtypeStruct((K, cb), chunks.dtype))
+    # (B, K, cb) bucket-major -> (K, B*cb) column order, drop the pad
+    out = jnp.moveaxis(tables, 0, 1).reshape(K, B * cb)
+    res = out[:, :c].reshape(-1)[:n].reshape(x.shape)
     return res / K if op == "mean" else res
 
 
 def ring_allreduce_multi(x: jnp.ndarray, axes: Sequence[str],
-                         op: str = "add") -> jnp.ndarray:
+                         op: str = "add", n_buckets: int = 1) -> jnp.ndarray:
     """Ring allreduce over several mesh axes by chaining one full-length
     ring per axis.  See :func:`hierarchical_ring_allreduce` for the
     cheaper intra/inter-pod form."""
     out = x
     for ax in axes:
-        out = ring_allreduce(out, ax, op="add")
+        out = ring_allreduce(out, ax, op="add", n_buckets=n_buckets)
     if op == "mean":
         K = jax.lax.axis_size(tuple(axes))
         out = out / K
@@ -257,7 +363,8 @@ def ring_allreduce_multi(x: jnp.ndarray, axes: Sequence[str],
 
 
 def ring_allreduce_q8(x: jnp.ndarray, axis: str, op: str = "add",
-                      scale_block: int = Q.SCALE_BLOCK) -> jnp.ndarray:
+                      scale_block: int = Q.SCALE_BLOCK,
+                      n_buckets: int = 1) -> jnp.ndarray:
     """Ring allreduce whose ``ppermute`` payloads are int8 values + one
     f32 scale per ``scale_block`` values — the wire really moves ~1
     byte/value (+ scale overhead), and the tally records exactly that.
@@ -276,6 +383,13 @@ def ring_allreduce_q8(x: jnp.ndarray, axis: str, op: str = "add",
     quantize→dequantize roundtrip so the "consumers see a quantized
     value" contract is K-independent (matching the float-wire
     transports' fake quantization).
+
+    ``n_buckets`` > 1 pipelines :func:`bucket_widths` column buckets of
+    the chunk matrix: bucket b+1's reduce-scatter (each hop a real
+    quantize — the encode compute) runs while bucket b's quantize-once
+    int8 payload circulates through the all-gather.  The scale blocks
+    re-group per bucket, so the bucketed result differs from the
+    unbucketed one only within the documented q8 bound.
     """
     assert op in ("add", "mean"), op
     assert jnp.issubdtype(x.dtype, jnp.floating), x.dtype
@@ -285,44 +399,76 @@ def ring_allreduce_q8(x: jnp.ndarray, axis: str, op: str = "add",
     i = jax.lax.axis_index(axis)
     chunks, n = _to_chunks(x.astype(jnp.float32), K)
     c = chunks.shape[1]
-    record_wire_bytes("ring_allreduce_q8",
-                      2 * (K - 1) * Q.wire_nbytes(c, scale_block))
     fwd = _ring_fwd(K)
+    B, cb = bucket_widths(c, n_buckets)
 
-    def chunk_at(j):
-        return jax.lax.dynamic_index_in_dim(chunks, j % K, 0, keepdims=False)
+    def _rs_quantized(blk, width):
+        """Quantize-forward reduce-scatter of one (K, width) chunk
+        matrix -> the completed chunk quantized ONCE: the staged int8
+        wire payload the all-gather circulates."""
+        def chunk_at(j):
+            return jax.lax.dynamic_index_in_dim(blk, j % K, 0,
+                                                keepdims=False)
+        send = chunk_at(i)
+        for t in range(K - 1):
+            q, s = Q.quantize_i8(send, scale_block)
+            q = jax.lax.ppermute(q, axis, fwd)
+            s = jax.lax.ppermute(s, axis, fwd)
+            send = Q.dequantize_i8(q, s, width) + chunk_at(i - t - 1)
+        return Q.quantize_i8(send, scale_block)
 
-    # reduce-scatter, quantize-forward
-    send = chunk_at(i)
-    for t in range(K - 1):
-        q, s = Q.quantize_i8(send, scale_block)
-        q = jax.lax.ppermute(q, axis, fwd)
-        s = jax.lax.ppermute(s, axis, fwd)
-        send = Q.dequantize_i8(q, s, c) + chunk_at(i - t - 1)
-
-    # all-gather: quantize once, circulate the int8 payload unchanged
-    q, s = Q.quantize_i8(send, scale_block)
-    out = jnp.zeros_like(chunks)
-    out = jax.lax.dynamic_update_index_in_dim(
-        out, Q.dequantize_i8(q, s, c), (i + 1) % K, 0)
-    for t in range(K - 1):
-        q = jax.lax.ppermute(q, axis, fwd)
-        s = jax.lax.ppermute(s, axis, fwd)
+    def _ag_quantized(qs, width):
+        """Circulate the staged int8 payload unchanged; every node —
+        the owner included — decodes identically, so the result stays
+        exactly replicated."""
+        q, s = qs
+        out = jnp.zeros((K, width), jnp.float32)
         out = jax.lax.dynamic_update_index_in_dim(
-            out, Q.dequantize_i8(q, s, c), (i - t) % K, 0)
+            out, Q.dequantize_i8(q, s, width), (i + 1) % K, 0)
+        for t in range(K - 1):
+            q = jax.lax.ppermute(q, axis, fwd)
+            s = jax.lax.ppermute(s, axis, fwd)
+            out = jax.lax.dynamic_update_index_in_dim(
+                out, Q.dequantize_i8(q, s, width), (i - t) % K, 0)
+        return out
 
-    res = out.reshape(-1)[:n].reshape(x.shape)
+    if B == 1:
+        record_wire_bytes("ring_allreduce_q8",
+                          2 * (K - 1) * Q.wire_nbytes(c, scale_block))
+        out = _ag_quantized(_rs_quantized(chunks, c), c)
+        res = out.reshape(-1)[:n].reshape(x.shape)
+        return res / K if op == "mean" else res
+
+    if B * cb > c:
+        chunks = jnp.pad(chunks, ((0, 0), (0, B * cb - c)))
+    for b in range(B):
+        _record_bucket_bytes("ring_allreduce_q8",
+                             2 * (K - 1) * Q.wire_nbytes(cb, scale_block), b)
+
+    def prep(b):
+        blk = jax.lax.dynamic_slice_in_dim(chunks, b * cb, cb, axis=1)
+        return _rs_quantized(blk, cb)
+
+    def move(qs):
+        return _ag_quantized(qs, cb)
+
+    tables = _sw_pipeline(
+        B, prep, move, jax.ShapeDtypeStruct((K, cb), jnp.float32))
+    out = jnp.moveaxis(tables, 0, 1).reshape(K, B * cb)
+    res = out[:, :c].reshape(-1)[:n].reshape(x.shape)
     return res / K if op == "mean" else res
 
 
 def ring_allreduce_q8_multi(x: jnp.ndarray, axes: Sequence[str],
                             op: str = "add",
-                            scale_block: int = Q.SCALE_BLOCK) -> jnp.ndarray:
+                            scale_block: int = Q.SCALE_BLOCK,
+                            n_buckets: int = 1) -> jnp.ndarray:
     """Chained per-axis int8 rings (mean divides once at the end so the
     intermediate sums keep full int8 range)."""
     out = x
     for ax in axes:
-        out = ring_allreduce_q8(out, ax, op="add", scale_block=scale_block)
+        out = ring_allreduce_q8(out, ax, op="add", scale_block=scale_block,
+                                n_buckets=n_buckets)
     if op == "mean":
         out = out / jax.lax.axis_size(tuple(axes))
     return out
@@ -336,7 +482,7 @@ def hierarchical_ring_allreduce(x: jnp.ndarray, axes: Sequence[str],
                                 op: str = "add",
                                 intra_chunk_elems: Optional[int] = None,
                                 inter_chunk_elems: Optional[int] = None,
-                                ) -> jnp.ndarray:
+                                n_buckets: int = 1) -> jnp.ndarray:
     """Hierarchical allreduce over multi-axis dp meshes: reduce-scatter
     on the *intra-pod* axis (the LAST of ``axes`` — the fastest-varying,
     highest-bandwidth one), ring-allreduce the owned 1/K_intra shard over
@@ -353,6 +499,17 @@ def hierarchical_ring_allreduce(x: jnp.ndarray, axes: Sequence[str],
     unchanged).  With a single axis this IS ``ring_allreduce`` — same
     schedule, bit-identical result.  Wire bytes are recorded under
     ``ring_hier_intra`` / ``ring_hier_inter``.
+
+    ``n_buckets`` > 1 on a two-axis mesh software-pipelines the three
+    stages per bucket: bucket b+1's intra reduce-scatter runs while
+    bucket b moves through the inter ring + intra all-gather.  A bucket
+    is a column range of the INTER chunk matrix (the finest level that
+    re-chunks), gathered out of the intra chunk matrix so every
+    element keeps its chunk row at BOTH levels — which is what keeps the
+    bucketed result bit-identical to the unbucketed schedule.  With
+    three or more axes the chained inter rings re-chunk the full shard
+    per axis and no bucket-compatible column partition exists, so the
+    exchange runs unbucketed (documented fallback).
     """
     assert op in ("add", "mean"), op
     axes = tuple(axes)
@@ -360,22 +517,71 @@ def hierarchical_ring_allreduce(x: jnp.ndarray, axes: Sequence[str],
         return x
     if len(axes) == 1:
         return ring_allreduce(x, axes[0], op=op,
-                              max_chunk_elems=intra_chunk_elems)
+                              max_chunk_elems=intra_chunk_elems,
+                              n_buckets=n_buckets)
     intra = axes[-1]
     K1 = jax.lax.axis_size(intra)
     i1 = jax.lax.axis_index(intra)
     chunks, n = _to_chunks(x, K1)
-    if K1 > 1:
-        record_wire_bytes(
-            "ring_hier_intra",
-            2 * (K1 - 1) * chunks.shape[1] * jnp.dtype(x.dtype).itemsize)
-    shard = _ring_reduce_scatter(chunks, intra, i1, K1, intra_chunk_elems)
-    for ax in axes[:-1]:
-        shard = ring_allreduce(shard, ax, op="add",
-                               max_chunk_elems=inter_chunk_elems,
-                               kind="ring_hier_inter")
-    out = _ring_all_gather(shard, intra, i1, K1, intra_chunk_elems)
-    res = out.reshape(-1)[:n].reshape(x.shape)
+    c = chunks.shape[1]
+    isz = jnp.dtype(x.dtype).itemsize
+    B = 1
+    if len(axes) == 2:
+        Ka = jax.lax.axis_size(axes[0])
+        ca = -(-c // Ka)
+        B, cab = bucket_widths(ca, n_buckets)
+    if B == 1:
+        if K1 > 1:
+            record_wire_bytes("ring_hier_intra", 2 * (K1 - 1) * c * isz)
+        shard = _ring_reduce_scatter(chunks, intra, i1, K1,
+                                     intra_chunk_elems)
+        for ax in axes[:-1]:
+            shard = ring_allreduce(shard, ax, op="add",
+                                   max_chunk_elems=inter_chunk_elems,
+                                   kind="ring_hier_inter")
+        out = _ring_all_gather(shard, intra, i1, K1, intra_chunk_elems)
+        res = out.reshape(-1)[:n].reshape(x.shape)
+        if op == "mean":
+            res = res / jax.lax.axis_size(axes)
+        return res
+
+    # two-level bucketed pipeline: bucket b = inter columns
+    # [b*cab, (b+1)*cab), i.e. shard positions {ra*ca + col} — gathered
+    # so element -> chunk-row is preserved at both ring levels
+    ia = jax.lax.axis_index(axes[0])
+    for b in range(B):
+        if K1 > 1:
+            _record_bucket_bytes("ring_hier_intra",
+                                 2 * (K1 - 1) * Ka * cab * isz, b)
+        if Ka > 1:
+            _record_bucket_bytes("ring_hier_inter",
+                                 2 * (Ka - 1) * cab * isz, b)
+    # pad to the full (Ka, ca) shard grid + one dummy zero column that
+    # absorbs the bucket-pad gathers of the last (short) bucket
+    grid = jnp.pad(chunks, ((0, 0), (0, Ka * ca + 1 - c)))
+    rows = jnp.arange(Ka, dtype=jnp.int32)[:, None]
+
+    def prep(b):
+        cols = b * cab + jnp.arange(cab, dtype=jnp.int32)[None, :]
+        gid = jnp.where(cols < ca, rows * ca + cols, Ka * ca)
+        blk = jnp.take(grid, gid.reshape(-1), axis=1)   # (K1, Ka*cab)
+        return _ring_reduce_scatter(blk, intra, i1, K1, intra_chunk_elems)
+
+    def move(piece):
+        blk = piece.reshape(Ka, cab)                    # inter chunk rows
+        red = _ring_reduce_scatter(blk, axes[0], ia, Ka,
+                                   inter_chunk_elems)
+        full = _ring_all_gather(red, axes[0], ia, Ka, inter_chunk_elems)
+        return _ring_all_gather(full.reshape(-1), intra, i1, K1,
+                                intra_chunk_elems)      # (K1, Ka*cab)
+
+    tables = _sw_pipeline(
+        B, prep, move, jax.ShapeDtypeStruct((K1, Ka * cab), chunks.dtype))
+    # (B, K1, Ka, cab) -> (K1, Ka, B*cab); the bucket-pad columns are
+    # exactly the tail >= ca of each inter row
+    out = jnp.transpose(tables.reshape(B, K1, Ka, cab), (1, 2, 0, 3))
+    out = out.reshape(K1, Ka, B * cab)[:, :, :ca].reshape(K1, Ka * ca)
+    res = out[:, :c].reshape(-1)[:n].reshape(x.shape)
     if op == "mean":
         res = res / jax.lax.axis_size(axes)
     return res
@@ -385,28 +591,18 @@ def hierarchical_ring_allreduce(x: jnp.ndarray, axes: Sequence[str],
 # packed sparse all-gather (ring circulation of an opaque payload)
 
 
-def all_gather_packed(payload: Sequence[jnp.ndarray], axes: AxisName,
-                      kind: str = "all_gather_packed"):
-    """Ring all-gather of a multi-array *packed* payload: every node's
-    tuple of arrays (bit-packed index words, int8 values, f32 scales, …)
-    circulates over K-1 ``ppermute`` hops per axis, and the tally
-    records exactly the packed bytes that move — the collective that
-    makes the sparse exchanges' ceil(log2 n)-bit + 1-byte/value
-    accounting real (vs ``all_gather``'s raw f32+int32).
-
-    Returns a tuple of (K, ...) arrays stacked in linear node order
-    (row-major over ``axes``, matching :func:`all_gather`'s layout).
-    Multi-axis meshes chain one circulation per axis, gathering the
-    innermost (last) axis first; the summed bytes telescope to exactly
-    ``(K-1) * payload_nbytes`` per node, same as a single-axis ring.
-    """
+def _circulate_packed(payload, axes: AxisName, record) -> tuple:
+    """One full multi-axis ring circulation of a packed payload tuple
+    -> (K_total, ...) arrays in linear node order.  ``record(K, nbytes)``
+    is called per gathering axis (None = the caller already recorded)."""
     out = tuple(payload)
     for ax in reversed(_axes_tuple(axes)):
         K = jax.lax.axis_size(ax)
         if K == 1:
             out = tuple(p[None] for p in out)
             continue
-        record_wire_bytes(kind, (K - 1) * sum(_nbytes(p) for p in out))
+        if record is not None:
+            record(K, (K - 1) * sum(_nbytes(p) for p in out))
         i = jax.lax.axis_index(ax)
         fwd = _ring_fwd(K)
         stacks = [jax.lax.dynamic_update_index_in_dim(
@@ -421,6 +617,59 @@ def all_gather_packed(payload: Sequence[jnp.ndarray], axes: AxisName,
     # collapse the per-axis leading dims to one linear node axis
     lead = len(_axes_tuple(axes))
     return tuple(p.reshape((-1,) + p.shape[lead:]) for p in out)
+
+
+def all_gather_packed(payload, axes: AxisName,
+                      kind: str = "all_gather_packed", *,
+                      encode_fn=None, n_buckets: int = 1):
+    """Ring all-gather of a multi-array *packed* payload: every node's
+    tuple of arrays (bit-packed index words, int8 values, f32 scales, …)
+    circulates over K-1 ``ppermute`` hops per axis, and the tally
+    records exactly the packed bytes that move — the collective that
+    makes the sparse exchanges' ceil(log2 n)-bit + 1-byte/value
+    accounting real (vs ``all_gather``'s raw f32+int32).
+
+    Returns a tuple of (K, ...) arrays stacked in linear node order
+    (row-major over ``axes``, matching :func:`all_gather`'s layout).
+    Multi-axis meshes chain one circulation per axis, gathering the
+    innermost (last) axis first; the summed bytes telescope to exactly
+    ``(K-1) * payload_nbytes`` per node, same as a single-axis ring.
+
+    Pipelined form: ``encode_fn(b) -> payload tuple`` (equal shapes for
+    every bucket) with ``n_buckets`` > 1 ignores ``payload`` and runs
+    the bucketed double-buffered schedule instead — bucket b+1's encode
+    (quantize + bit-plane pack) runs while bucket b's payload circulates
+    (:func:`_sw_pipeline`).  Returns (n_buckets, K, ...) arrays; bytes
+    are recorded per bucket under ``<op label>#b<i>`` sub-labels."""
+    if encode_fn is None or n_buckets <= 1:
+        if encode_fn is not None:
+            payload = encode_fn(0)
+        return _circulate_packed(
+            payload, axes, lambda K, nb: record_wire_bytes(kind, nb))
+    B = int(n_buckets)
+    staged0 = encode_fn(0)
+    K_total = jax.lax.axis_size(_axes_tuple(axes))
+    nbytes0 = sum(_nbytes(p) for p in staged0)
+    # host-side per-bucket recording: per gathering axis, the payload
+    # grows by the product of the already-gathered axis sizes
+    mult = 1
+    for ax in reversed(_axes_tuple(axes)):
+        K = jax.lax.axis_size(ax)
+        if K > 1:
+            for b in range(B):
+                _record_bucket_bytes(kind, (K - 1) * mult * nbytes0, b)
+        mult *= K
+    out_shapes = tuple(
+        jax.ShapeDtypeStruct((K_total,) + p.shape, p.dtype)
+        for p in staged0)
+
+    def prep(b):
+        return encode_fn(b)
+
+    def move(staged):
+        return _circulate_packed(staged, axes, None)
+
+    return _sw_pipeline(B, prep, move, out_shapes)
 
 
 # ---------------------------------------------------------------------------

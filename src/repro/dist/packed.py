@@ -52,6 +52,7 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.dist import chaos as CH
 from repro.dist import quantize as Q
 from repro.kernels import bitpack as BP
 
@@ -105,6 +106,26 @@ def make_plan(n: int, k: int, scale_block: int = 0,
                     scale_block=scale_block or Q.SCALE_BLOCK,
                     raw_index=4 * k < _index_nbytes(n, k, best),
                     checksum=checksum)
+
+
+def bucket_plan(plan: PackPlan, kb: int) -> PackPlan:
+    """The per-bucket sub-plan of a bucketed packed exchange: ``kb``
+    pairs per bucket with every wire-format parameter (width, lo_bits,
+    histogram length, scale_block, checksum) inherited from the parent —
+    the buckets are contiguous slices of the SAME sorted index space, so
+    each bucket's payload is self-contained and decodes independently.
+    Short buckets are sentinel-padded (idx = n, val = 0) to ``kb``;
+    the sentinel survives the format (indices live in [0, n]) and the
+    receiver's ``mode="drop"`` scatter discards it.  Bucketing keeps the
+    parent's lo_bits split rather than re-optimizing per bucket: the
+    overhead vs the unbucketed wire is exactly (B-1) extra histograms
+    plus the pad pairs — both priced by ``plan.wire_terms``."""
+    assert 1 <= kb <= plan.k, (kb, plan.k)
+    assert not plan.raw_index, plan
+    return PackPlan(n=plan.n, k=kb, width=plan.width,
+                    lo_bits=plan.lo_bits, n_buckets=plan.n_buckets,
+                    scale_block=plan.scale_block, raw_index=False,
+                    checksum=plan.checksum)
 
 
 def _index_base(plan: PackPlan) -> int:
@@ -218,6 +239,36 @@ def encode_sparse(vals: jnp.ndarray, idx: jnp.ndarray, plan: PackPlan,
     q, scales = Q.quantize_i8(vals_s, plan.scale_block)
     payload = _encode_indices_body(idx_s, plan,
                                    interpret=interpret) + (q, scales)
+    if plan.checksum:
+        payload = payload + (checksum_word(payload),)
+    return payload
+
+
+def encode_sparse_fused(vals: jnp.ndarray, idx: jnp.ndarray,
+                        plan: PackPlan, interpret: bool = True):
+    """:func:`encode_sparse` with the quantize + bit-plane-pack passes
+    collapsed into ONE Pallas launch (``quantize.quantize_pack_fused``):
+    the sorted (vals, idx) pair is read from HBM once instead of once
+    per pass.  Bit-exact against the composed path — same payload tuple,
+    same bytes, gated in tests/test_overlap.py.
+
+    The sort stays outside (a global argsort cannot be tile-local) and
+    the high-bits histogram is one cheap scatter-add; both consume the
+    sorted pair the fused kernel also reads.  Falls back to the composed
+    path when the plan is raw-index (nothing to pack) or when a guard
+    policy holds the structural sink open — the fused kernel masks
+    non-finite values like :func:`quantize.quantize_i8` does but cannot
+    report their count, and guarded runs must not lose fault events."""
+    if plan.raw_index or CH.structural_sink_active():
+        return encode_sparse(vals, idx, plan, interpret=interpret)
+    assert vals.shape == idx.shape == (plan.k,), (vals.shape, plan)
+    vals_s, idx_s = _sort_pairs(vals, idx)
+    counts = jnp.zeros((plan.n_buckets,), jnp.int32
+                       ).at[idx_s >> plan.lo_bits].add(1)
+    words, q, scales = Q.quantize_pack_fused(
+        vals_s, idx_s & ((1 << plan.lo_bits) - 1), plan.lo_bits,
+        plan.scale_block, interpret=interpret)
+    payload = (counts, words, q, scales)
     if plan.checksum:
         payload = payload + (checksum_word(payload),)
     return payload

@@ -37,6 +37,29 @@ wrappers over the pricers; neither contains a per-method exchange
 dispatch of its own anymore.  A new exchange = a new op here, priced
 once, executed once, tallied once.
 
+The overlapped exchange (``Plan.wire_buckets``, from
+``CompressionConfig.wire_buckets`` / ``--wire-buckets``): every
+bucketable ring exchange splits into ``collectives.bucket_widths``
+column buckets and software-pipelines them — bucket b's ppermute hops
+run while bucket b+1 encodes (reduce-scatter / quantize / fused packed
+encode).  The pricer mirrors the executor bucket for bucket:
+
+  * :func:`bucket_plan` — splits ONE op into its per-bucket
+    sub-exchanges, labelled ``<op.label>#b<i>``, whose descriptors sum
+    to the unbucketed tally plus the explicitly priced bucket padding.
+    ``wire_terms_by_op`` emits exactly the rows the bucketed executor
+    records (zero slack, gated in ``tests/test_overlap.py``).
+  * :func:`padding_overhead_terms` — per op, the accounted bytes minus
+    the pad-free ideal payload: the ``_to_chunks`` ceil-pad plus the
+    bucket pad.  ``accounted == ideal + overhead`` holds at every
+    bucket count, so raising ``wire_buckets`` changes an op's bytes by
+    exactly its padding delta.
+
+``mesh`` never buckets (the lax lowering is opaque) but is priced as a
+first-class substrate: DenseReduce/Reduce -> ``all_reduce``, gathers ->
+``all_gather``, leader exchanges -> ``broadcast``, with zero padding
+overhead.  See DESIGN.md "The overlapped bucketed exchange".
+
 Op catalogue (wire semantics per transport family):
 
   ==================  =====================================================
@@ -175,6 +198,11 @@ class Plan:
     K: int
     scale_block: int
     ops: Tuple[Op, ...]
+    # bucketed-exchange schedule: how many software-pipeline buckets the
+    # ring-family transports split each exchange into (1 = unbucketed —
+    # the historical schedule).  Part of the plan because the pricers
+    # must predict the per-bucket tally rows the executor records.
+    wire_buckets: int = 1
 
     @property
     def labels(self) -> Tuple[str, ...]:
@@ -218,7 +246,8 @@ def build_plan(cc: CompressionConfig, layout: GradientLayout, K: int,
 
     def _plan(ops) -> Plan:
         return Plan(method=method, phase=phase, transport=tkind, K=K,
-                    scale_block=sb, ops=tuple(ops))
+                    scale_block=sb, ops=tuple(ops),
+                    wire_buckets=getattr(cc, "wire_buckets", 1) or 1)
 
     if phase == PHASE_WARMUP or method == "none":
         return _plan([DenseReduce("grad", n_vals=n)])
@@ -393,37 +422,80 @@ def execute(plan: Plan, t, feeds: Dict[str, Callable],
 # the wire pricer: predicted trace-time tally per op, per collective kind
 
 
-def _op_wire_terms(op: Op, tkind: str, Ks: Tuple[int, ...], K: int,
-                   sb: int) -> Dict[str, float]:
-    """Structural wire bytes one executed op records, by collective
-    kind, on a ring-family transport.  The ring reduction rules:
-    2(Ka-1)·ceil(n/Ka)·itemsize per axis (chained), the hierarchical
-    split for multi-axis ``ring_hier``, q8 chunks priced through the
-    shared ``quantize.wire_nbytes``, packed payloads through the op's
-    own PackPlan."""
-    terms: Dict[str, float] = {}
+def bucket_plan(op: Op, n_buckets: int, tkind: str, Ks: Tuple[int, ...],
+                K: int, sb: int) -> Dict[str, Dict[str, float]]:
+    """The per-op bucketizer/pricer: split one exchange op into its
+    per-bucket sub-exchanges and return their exact wire descriptors —
+    ``{sub-label: {collective kind: bytes}}``, where an unbucketed
+    exchange keeps the op's own label and a bucketed one emits one
+    ``label#b<i>`` row per pipeline bucket, mirroring the executor's
+    :func:`collectives._record_bucket_bytes` labels byte for byte.
 
-    def add(kind: str, b: float) -> None:
-        if b:
-            terms[kind] = terms.get(kind, 0.0) + float(b)
+    The bucket split rule is :func:`collectives.bucket_widths` applied
+    exactly where the executing collective applies it — per-axis chunk
+    columns for the f32/q8 rings, inter-level columns for the two-axis
+    hierarchical ring (three or more axes run unbucketed — the
+    executor's documented fallback), sorted pairs for the packed
+    gather (per-bucket sub-format from ``packed.bucket_plan``).  The
+    per-bucket rows sum to the unbucketed tally plus the explicitly
+    priced bucket padding (:func:`padding_overhead_terms`).
+
+    ``mesh`` prices the lax-collective tally kinds (``all_reduce`` /
+    ``all_gather`` / ``broadcast``) and never buckets — the lax
+    lowering is opaque, so there is no schedule to pipeline."""
+    out: Dict[str, Dict[str, float]] = {}
+
+    def add(bucket: Optional[int], kind: str, b: float) -> None:
+        if not b:
+            return
+        lbl = op.label if bucket is None else f"{op.label}#b{bucket}"
+        terms = out.setdefault(lbl, {})
+        terms[kind] = terms.get(kind, 0.0) + float(b)
+
+    mesh = tkind == "mesh"
+    WB = 1 if mesh else max(int(n_buckets), 1)
 
     def reduce_f32(n_vals: int, itemsize: int = BYTES_F32) -> None:
         if n_vals <= 0:
             return
-        if tkind == "ring_hier" and len(Ks) > 1:
+        if mesh:
+            add(None, "all_reduce", 2 * (K - 1) / K * n_vals * itemsize)
+        elif tkind == "ring_hier" and len(Ks) > 1:
             K1 = Ks[-1]
             c = -(-n_vals // K1)
-            if K1 > 1:
-                add("ring_hier_intra", 2 * (K1 - 1) * c * itemsize)
-            for Ka in Ks[:-1]:
-                if Ka > 1:
-                    add("ring_hier_inter",
-                        2 * (Ka - 1) * (-(-c // Ka)) * itemsize)
+            B = 1
+            if len(Ks) == 2:
+                Ka = Ks[0]
+                ca = -(-c // Ka)
+                B, cab = C.bucket_widths(ca, WB)
+            if B == 1:
+                if K1 > 1:
+                    add(None, "ring_hier_intra", 2 * (K1 - 1) * c * itemsize)
+                for Ka in Ks[:-1]:
+                    if Ka > 1:
+                        add(None, "ring_hier_inter",
+                            2 * (Ka - 1) * (-(-c // Ka)) * itemsize)
+            else:
+                Ka = Ks[0]
+                for b in range(B):
+                    if K1 > 1:
+                        add(b, "ring_hier_intra",
+                            2 * (K1 - 1) * Ka * cab * itemsize)
+                    if Ka > 1:
+                        add(b, "ring_hier_inter",
+                            2 * (Ka - 1) * cab * itemsize)
         else:
             for Ka in Ks:
                 if Ka > 1:
-                    add("ring_allreduce",
-                        2 * (Ka - 1) * (-(-n_vals // Ka)) * itemsize)
+                    c = -(-n_vals // Ka)
+                    B, cb = C.bucket_widths(c, WB)
+                    if B == 1:
+                        add(None, "ring_allreduce",
+                            2 * (Ka - 1) * c * itemsize)
+                    else:
+                        for b in range(B):
+                            add(b, "ring_allreduce",
+                                2 * (Ka - 1) * cb * itemsize)
 
     if isinstance(op, DenseReduce):
         reduce_f32(op.n_vals)
@@ -431,41 +503,72 @@ def _op_wire_terms(op: Op, tkind: str, Ks: Tuple[int, ...], K: int,
         if op.wire == "q8" and tkind == "ring_q8":
             for Ka in Ks:
                 if Ka > 1:
-                    add("ring_allreduce_q8",
-                        2 * (Ka - 1) * Q.wire_nbytes(-(-op.n_vals // Ka),
-                                                     sb))
+                    c = -(-op.n_vals // Ka)
+                    B, cb = C.bucket_widths(c, WB)
+                    if B == 1:
+                        add(None, "ring_allreduce_q8",
+                            2 * (Ka - 1) * Q.wire_nbytes(c, sb))
+                    else:
+                        for b in range(B):
+                            add(b, "ring_allreduce_q8",
+                                2 * (Ka - 1) * Q.wire_nbytes(cb, sb))
         else:
             reduce_f32(op.n_vals)
     elif isinstance(op, AllGather):
-        add("all_gather", (K - 1) * op.n_vals * BYTES_F32)
+        add(None, "all_gather", (K - 1) * op.n_vals * BYTES_F32)
     elif isinstance(op, PackedSparseExchange):
         if op.k > 0:
             if tkind == "ring_packed":
-                add("all_gather_packed", (K - 1) * PK.wire_nbytes(op.pack))
+                B = 1
+                if not op.pack.raw_index:
+                    B, kb = C.bucket_widths(op.k, WB)
+                if B == 1:
+                    add(None, "all_gather_packed",
+                        (K - 1) * PK.wire_nbytes(op.pack))
+                else:
+                    sub = PK.bucket_plan(op.pack, kb)
+                    for b in range(B):
+                        add(b, "all_gather_packed",
+                            (K - 1) * PK.wire_nbytes(sub))
             else:
-                add("all_gather", (K - 1) * op.k * (BYTES_F32 + BYTES_I32))
+                add(None, "all_gather",
+                    (K - 1) * op.k * (BYTES_F32 + BYTES_I32))
     elif isinstance(op, SparseExchange):
         if op.k > 0:
-            add("all_gather", (K - 1) * op.k * (BYTES_F32 + BYTES_I32))
+            add(None, "all_gather",
+                (K - 1) * op.k * (BYTES_F32 + BYTES_I32))
     elif isinstance(op, IndexBroadcast):
         # method-blind packing: the index wire carries no values, so
         # ring_packed re-routes it for every method
         if tkind == "ring_packed":
-            add("broadcast_packed",
+            add(None, "broadcast_packed",
                 (K - 1) / K * PK.index_nbytes(op.pack))
         else:
-            add("broadcast", (K - 1) / K * op.k * BYTES_I32)
+            add(None, "broadcast", (K - 1) / K * op.k * BYTES_I32)
     elif isinstance(op, LeaderBroadcast):
-        add("broadcast", (K - 1) / K * op.n_vals * BYTES_F32)
+        add(None, "broadcast", (K - 1) / K * op.n_vals * BYTES_F32)
     else:
         raise TypeError(op)
+    return out
+
+
+def _op_wire_terms(op: Op, tkind: str, Ks: Tuple[int, ...], K: int,
+                   sb: int) -> Dict[str, float]:
+    """Unbucketed per-op pricing, aggregated by collective kind — the
+    pre-bucketing interface, kept for callers that only need the op's
+    total (the bucketed rows sum to it plus the priced bucket pad)."""
+    terms: Dict[str, float] = {}
+    for sub in bucket_plan(op, 1, tkind, Ks, K, sb).values():
+        for kind, b in sub.items():
+            terms[kind] = terms.get(kind, 0.0) + b
     return terms
 
 
 def _wire_ctx(plan: Plan, transport: Optional[str],
               axis_sizes: Optional[Sequence[int]]):
     tkind = transport if transport is not None else plan.transport
-    assert tkind in ("ring", "ring_q8", "ring_hier", "ring_packed"), tkind
+    assert tkind in ("mesh", "ring", "ring_q8", "ring_hier",
+                     "ring_packed"), tkind
     Ks = tuple(axis_sizes) if axis_sizes else (plan.K,)
     assert int(np.prod(Ks)) == plan.K, (Ks, plan.K)
     return tkind, Ks
@@ -473,29 +576,106 @@ def _wire_ctx(plan: Plan, transport: Optional[str],
 
 def wire_terms_by_op(plan: Plan, transport: Optional[str] = None,
                      axis_sizes: Optional[Sequence[int]] = None,
+                     wire_buckets: Optional[int] = None,
                      ) -> Dict[str, Dict[str, float]]:
     """{op label: {collective kind: bytes}} — the per-op prediction of
     ``collectives.wire_report(by_op=True)`` for one executed plan (ops
-    that move no bytes are omitted, matching the tally)."""
+    that move no bytes are omitted, matching the tally).  A bucketed
+    plan (``plan.wire_buckets`` > 1, overridable per call) prices one
+    ``label#b<i>`` row per pipeline bucket — the exact labels the
+    executor's per-bucket host-side recording emits."""
     tkind, Ks = _wire_ctx(plan, transport, axis_sizes)
+    WB = wire_buckets if wire_buckets is not None else plan.wire_buckets
     out: Dict[str, Dict[str, float]] = {}
     for op in plan.ops:
-        terms = _op_wire_terms(op, tkind, Ks, plan.K, plan.scale_block)
-        if terms:
-            out[op.label] = terms
+        for lbl, terms in bucket_plan(op, WB, tkind, Ks, plan.K,
+                                      plan.scale_block).items():
+            dst = out.setdefault(lbl, {})
+            for kind, b in terms.items():
+                dst[kind] = dst.get(kind, 0.0) + b
     return out
 
 
 def wire_terms(plan: Plan, transport: Optional[str] = None,
                axis_sizes: Optional[Sequence[int]] = None,
-               ) -> Dict[str, float]:
+               wire_buckets: Optional[int] = None) -> Dict[str, float]:
     """Aggregate of :func:`wire_terms_by_op` by collective kind — the
     prediction of plain ``collectives.wire_report()`` for one step."""
     out: Dict[str, float] = {}
-    for terms in wire_terms_by_op(plan, transport, axis_sizes).values():
+    for terms in wire_terms_by_op(plan, transport, axis_sizes,
+                                  wire_buckets).values():
         for kind, b in terms.items():
             out[kind] = out.get(kind, 0.0) + b
     return out
+
+
+def padding_overhead_terms(plan: Plan, transport: Optional[str] = None,
+                           axis_sizes: Optional[Sequence[int]] = None,
+                           wire_buckets: Optional[int] = None,
+                           ) -> Dict[str, float]:
+    """{op label: zero-pad bytes} — the part of each op's *accounted*
+    wire bytes that carries padding rather than payload, priced
+    explicitly: the ``_to_chunks`` ceil-pad every ring hop ships (a
+    non-multiple-of-K vector pads its last chunk), the bucket-pad
+    columns a pipelined schedule adds on top, and the packed wire's
+    per-bucket duplicated histograms + sentinel pad pairs.  The ideal
+    (pad-free) payload divides exactly: ``2(Ka-1)/Ka · nbytes`` per ring
+    axis, ``(K-1) · wire_nbytes(parent pack)`` for the packed gather.
+    By construction ``accounted == ideal + overhead`` per op, so the
+    bucketed-vs-unbucketed byte delta of a plan is exactly the delta of
+    these overheads (property-tested).  Ops with no padding are
+    omitted; mesh moves exactly-sized lax buffers and never pads."""
+    tkind, Ks = _wire_ctx(plan, transport, axis_sizes)
+    WB = wire_buckets if wire_buckets is not None else plan.wire_buckets
+    out: Dict[str, float] = {}
+    for op in plan.ops:
+        accounted = 0.0
+        for terms in bucket_plan(op, WB, tkind, Ks, plan.K,
+                                 plan.scale_block).values():
+            accounted += sum(terms.values())
+        ideal = _op_ideal_bytes(op, tkind, Ks, plan.K, plan.scale_block)
+        pad = accounted - ideal
+        if pad > 1e-9:
+            out[op.label] = pad
+    return out
+
+
+def _op_ideal_bytes(op: Op, tkind: str, Ks: Tuple[int, ...], K: int,
+                    sb: int) -> float:
+    """The pad-free wire bytes of one op: what the exchange would move
+    if every chunk split divided exactly (fractional chunks allowed) —
+    the baseline :func:`padding_overhead_terms` subtracts."""
+    if tkind == "mesh":
+        # lax collectives move exactly-sized buffers: ideal == accounted
+        return sum(sum(t.values()) for t in
+                   bucket_plan(op, 1, tkind, Ks, K, sb).values())
+
+    def ring_ideal(n_vals: float, bytes_per_elem: float) -> float:
+        if n_vals <= 0:
+            return 0.0
+        if tkind == "ring_hier" and len(Ks) > 1:
+            K1 = Ks[-1]
+            total = 2 * (K1 - 1) / K1 * n_vals * bytes_per_elem
+            shard = n_vals / K1     # each inter axis allreduces the shard
+            for Ka in Ks[:-1]:
+                total += 2 * (Ka - 1) / Ka * shard * bytes_per_elem
+            return total
+        return sum(2 * (Ka - 1) / Ka * n_vals * bytes_per_elem
+                   for Ka in Ks if Ka > 1)
+
+    if isinstance(op, DenseReduce):
+        return ring_ideal(op.n_vals, BYTES_F32)
+    if isinstance(op, Reduce):
+        if op.wire == "q8" and tkind == "ring_q8":
+            # 1 byte/value + 4/scale_block bytes/value of f32 scales
+            return ring_ideal(op.n_vals, 1.0 + 4.0 / sb)
+        return ring_ideal(op.n_vals, BYTES_F32)
+    if isinstance(op, PackedSparseExchange) and op.k > 0 \
+            and tkind == "ring_packed":
+        return float((K - 1) * PK.wire_nbytes(op.pack))
+    # gathers/broadcasts ship exactly-sized payloads: no padding
+    return sum(sum(t.values()) for t in
+               bucket_plan(op, 1, tkind, Ks, K, sb).values())
 
 
 # ---------------------------------------------------------------------------

@@ -73,6 +73,26 @@ def fake_quantize(x: jnp.ndarray, scale_block: int = SCALE_BLOCK):
     return dequantize_i8(q, scales, x.size, x.shape)
 
 
+def quantize_pack_fused(vals: jnp.ndarray, idx_lo: jnp.ndarray,
+                        width: int, scale_block: int = SCALE_BLOCK,
+                        interpret: bool = True):
+    """Fused single-kernel encode of a sorted sparse payload: ONE
+    Pallas launch block-quantizes ``vals`` (-> int8 + per-block scales,
+    exactly :func:`quantize_i8`'s math) AND bit-plane packs the masked
+    low index bits ``idx_lo`` (-> ``(width, ceil(k/32))`` int32 words,
+    exactly ``kernels.bitpack.pack_bits``'s layout), so the (vals, idx)
+    pair is read from HBM once per bucket instead of once per pass.
+    Returns ``(words, q, scales)``; bit-exact against the composed path.
+
+    No structural-fault reporting: the fused kernel cannot surface the
+    non-finite count (it masks them to zero like :func:`quantize_i8`
+    does), so callers running under an open structural sink must use the
+    composed path instead (see ``packed.encode_sparse_fused``)."""
+    from repro.kernels import bitpack as BP
+    return BP.quantize_pack(vals, idx_lo, width, scale_block, _EPS,
+                            interpret)
+
+
 def wire_nbytes(n: int, scale_block: int = SCALE_BLOCK) -> int:
     """Wire bytes of the int8 representation of ``n`` values: the padded
     int8 payload + one f32 scale per block.  Single source of truth for

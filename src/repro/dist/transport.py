@@ -107,6 +107,11 @@ class MeshTransport:
     scale_block: int = Q.SCALE_BLOCK           # int8-wire scale granularity
     interpret: bool = True                     # Pallas pack kernels on CPU
     guard: str = "off"                         # executor guard policy
+    # bucketed-exchange schedule (ring family only): buckets per
+    # exchange for the software-pipelined rotate-while-encode schedule;
+    # 1 = the historical unbucketed path.  Mesh ignores it — the lax
+    # collectives' lowering is opaque, there is no schedule to pipeline.
+    wire_buckets: int = 1
 
     kind = "mesh"              # class attr, not a field: the pricing key
 
@@ -203,11 +208,13 @@ class RingTransport(MeshTransport):
     kind = "ring"
 
     def mean(self, x):
-        return C.ring_allreduce_multi(x, self.axes, op="mean") \
+        return C.ring_allreduce_multi(x, self.axes, op="mean",
+                                      n_buckets=self.wire_buckets) \
             if self.axes else x
 
     def sum(self, x):
-        return C.ring_allreduce_multi(x, self.axes, op="add") \
+        return C.ring_allreduce_multi(x, self.axes, op="add",
+                                      n_buckets=self.wire_buckets) \
             if self.axes else x
 
     def from_leader(self, x, leader):
@@ -231,7 +238,8 @@ class RingQ8Transport(RingTransport):
         if not self.axes:
             return Q.fake_quantize(x, self.scale_block)
         return C.ring_allreduce_q8_multi(x, self.axes, op="mean",
-                                         scale_block=self.scale_block)
+                                         scale_block=self.scale_block,
+                                         n_buckets=self.wire_buckets)
 
 
 @dataclass(frozen=True)
@@ -251,12 +259,14 @@ class RingHierTransport(RingTransport):
     def mean(self, x):
         return C.hierarchical_ring_allreduce(
             x, self.axes, op="mean", intra_chunk_elems=self.intra_chunk,
-            inter_chunk_elems=self.inter_chunk) if self.axes else x
+            inter_chunk_elems=self.inter_chunk,
+            n_buckets=self.wire_buckets) if self.axes else x
 
     def sum(self, x):
         return C.hierarchical_ring_allreduce(
             x, self.axes, op="add", intra_chunk_elems=self.intra_chunk,
-            inter_chunk_elems=self.inter_chunk) if self.axes else x
+            inter_chunk_elems=self.inter_chunk,
+            n_buckets=self.wire_buckets) if self.axes else x
 
 
 @dataclass(frozen=True)
@@ -279,6 +289,22 @@ class RingPackedTransport(RingTransport):
 
     kind = "ring_packed"
 
+    def _decode_contrib(self, pj, plan, dtype, n):
+        """Decode + scatter one received payload, masked out entirely
+        when a guard policy is on and its structural validation fails
+        (checksum, histogram sum, index bounds/monotonicity, finite
+        scales) — the contribution stays in the sender's EF residual —
+        with the bad count landing on the executing op's fault tally
+        through the structural sink."""
+        vj, ij = PK.decode_sparse(pj, plan, interpret=self.interpret)
+        out = _scatter(vj.astype(dtype), ij, n)
+        if self.guard != "off":
+            ok, bad = PK.validate_payload(pj, plan,
+                                          interpret=self.interpret)
+            CH.report_structural(bad)
+            out = jnp.where(ok, out, jnp.zeros_like(out))
+        return out
+
     def sparse_gather_packed(self, vals, idx, n, plan=None):
         if not self.axes or vals.shape[0] == 0:
             return super().sparse_gather_packed(vals, idx, n)
@@ -288,25 +314,64 @@ class RingPackedTransport(RingTransport):
         # the same (n, k) the pricers priced
         assert plan.n == n and plan.k == vals.shape[0], (plan, n,
                                                          vals.shape)
-        payload = PK.encode_sparse(vals, idx, plan,
-                                   interpret=self.interpret)
-        gathered = C.all_gather_packed(payload, self.axes)
+        B = 1
+        if not plan.raw_index:
+            B, kb = C.bucket_widths(plan.k, self.wire_buckets)
+        if B == 1:
+            payload = PK.encode_sparse_fused(vals, idx, plan,
+                                             interpret=self.interpret)
+            gathered = C.all_gather_packed(payload, self.axes)
+            return jnp.stack([
+                self._decode_contrib(tuple(a[j] for a in gathered),
+                                     plan, vals.dtype, n)
+                for j in range(self.K)])   # K static; one decode/node
+        # bucketed double-buffered schedule: sort ONCE, sentinel-pad to
+        # B*kb pairs, and ship each bucket as a self-contained payload
+        # (own histogram/scales/checksum — the priced bucket overhead)
+        # so bucket b+1's fused encode runs under bucket b's hops
+        sub = PK.bucket_plan(plan, kb)
+        vals_s, idx_s = PK._sort_pairs(vals, idx)
+        pad = B * kb - plan.k
+        if pad:
+            vals_s = jnp.concatenate(
+                [vals_s, jnp.zeros((pad,), vals_s.dtype)])
+            idx_s = jnp.concatenate(
+                [idx_s, jnp.full((pad,), n, jnp.int32)])
+
+        if CH.structural_sink_active():
+            # guarded runs encode eagerly (host loop): the composed
+            # encoder's non-finite reports cannot cross the fori-loop
+            # pipeline boundary, and fault events must not be lost.
+            # Circulation still pipelines; only the encode overlap is
+            # given up under guard (documented in DESIGN.md).
+            payloads = [PK.encode_sparse(
+                jax.lax.dynamic_slice_in_dim(vals_s, b * kb, kb),
+                jax.lax.dynamic_slice_in_dim(idx_s, b * kb, kb),
+                sub, interpret=self.interpret) for b in range(B)]
+            stacked = tuple(jnp.stack(parts)
+                            for parts in zip(*payloads))
+
+            def encode_fn(b):
+                return tuple(jax.lax.dynamic_index_in_dim(
+                    s, b, 0, keepdims=False) for s in stacked)
+        else:
+            def encode_fn(b):
+                return PK.encode_sparse_fused(
+                    jax.lax.dynamic_slice_in_dim(vals_s, b * kb, kb),
+                    jax.lax.dynamic_slice_in_dim(idx_s, b * kb, kb),
+                    sub, interpret=self.interpret)
+
+        gathered = C.all_gather_packed(None, self.axes,
+                                       encode_fn=encode_fn, n_buckets=B)
         outs = []
-        for j in range(self.K):          # K is static; one decode/node
-            pj = tuple(a[j] for a in gathered)
-            vj, ij = PK.decode_sparse(pj, plan, interpret=self.interpret)
-            out = _scatter(vj.astype(vals.dtype), ij, n)
-            if self.guard != "off":
-                # structural validation per received contribution: a
-                # payload failing the checks (checksum, histogram sum,
-                # index bounds/monotonicity, finite scales) is masked
-                # out entirely — its gradient stays in that node's EF
-                # residual — and the bad count lands on the executing
-                # op's fault tally through the structural sink
-                ok, bad = PK.validate_payload(pj, plan,
-                                              interpret=self.interpret)
-                CH.report_structural(bad)
-                out = jnp.where(ok, out, jnp.zeros_like(out))
+        for j in range(self.K):
+            # per-bucket supports are disjoint slices of one sorted
+            # index set, so summing the scatters is exact (each index
+            # receives from exactly one bucket; sentinels drop)
+            out = jnp.zeros((n,), vals.dtype)
+            for b in range(B):
+                pj = tuple(a[b][j] for a in gathered)
+                out = out + self._decode_contrib(pj, sub, vals.dtype, n)
             outs.append(out)
         return jnp.stack(outs)
 
@@ -418,6 +483,7 @@ def make_transport(kind: str, K: int, axes: Axis = (),
                    inter_chunk: Optional[int] = None,
                    interpret: bool = True,
                    guard: str = "off",
+                   wire_buckets: int = 1,
                    fault: Optional[CH.FaultSpec] = None):
     """Factory keyed by CompressionConfig.transport.  ``scale_block``
     (0 = default) sets the int8-wire scale granularity; ``intra_chunk``/
@@ -441,20 +507,21 @@ def make_transport(kind: str, K: int, axes: Axis = (),
     if guard not in CH.GUARD_POLICIES:
         raise ValueError(f"unknown guard {guard!r}; "
                          f"known: {CH.GUARD_POLICIES}")
+    wb = max(int(wire_buckets or 1), 1)
     args = (tuple(axes), K, tuple(ae_axes), node_index, sb, interpret)
     base = None
     if kind == "mesh":
         base = MeshTransport(*args, guard=guard)
     elif kind == "ring":
-        base = RingTransport(*args, guard=guard)
+        base = RingTransport(*args, guard=guard, wire_buckets=wb)
     elif kind == "ring_q8":
-        base = RingQ8Transport(*args, guard=guard)
+        base = RingQ8Transport(*args, guard=guard, wire_buckets=wb)
     elif kind == "ring_hier":
-        base = RingHierTransport(*args, guard=guard,
+        base = RingHierTransport(*args, guard=guard, wire_buckets=wb,
                                  intra_chunk=intra_chunk or None,
                                  inter_chunk=inter_chunk or None)
     elif kind == "ring_packed":
-        base = RingPackedTransport(*args, guard=guard)
+        base = RingPackedTransport(*args, guard=guard, wire_buckets=wb)
     elif kind == "sim":
         base = SimTransport(K, tuple(ae_axes), sb, interpret, guard)
     if base is None:

@@ -90,6 +90,66 @@ def _unpack_kernel(w_ref, out_ref, *, width: int):
     out_ref[...] = acc
 
 
+def _encode_fused_kernel(v_ref, x_ref, words_ref, q_ref, s_ref, *,
+                         width: int, eps: float):
+    """Fused sparse-wire encode: block-quantize the values AND bit-plane
+    pack the (pre-masked) low index bits in one program — the (vals, idx)
+    pair is read from HBM exactly once per bucket instead of once per
+    pass of the composed quantize -> pack pipeline."""
+    xb = v_ref[...]                                     # (m, sb) f32
+    xb = jnp.where(jnp.isfinite(xb), xb, jnp.zeros_like(xb))
+    scales = jnp.maximum(jnp.max(jnp.abs(xb), axis=1, keepdims=True),
+                         eps) / 127.0
+    q_ref[...] = jnp.clip(jnp.round(xb / scales), -127, 127
+                          ).astype(jnp.int8)
+    s_ref[...] = scales
+    x = x_ref[...]                                      # (GROUP, W) i32
+    r = jax.lax.broadcasted_iota(jnp.int32, x.shape, 0)
+    words_ref[...] = jnp.stack(
+        [jnp.sum(((x >> b) & 1) << r, axis=0) for b in range(width)])
+
+
+def quantize_pack(vals: jnp.ndarray, idx_lo: jnp.ndarray, width: int,
+                  scale_block: int, eps: float, interpret: bool = True):
+    """Single-launch fused encode of a sorted sparse payload:
+    ``vals`` (k,) f32 block-quantizes to (q int8 (m, scale_block),
+    scales f32 (m,)) and ``idx_lo`` (k,) int32 (already masked to
+    ``width`` low bits) bit-plane packs to (width, word_count(k)) int32 —
+    all three outputs from ONE ``pallas_call``.  Bit-exact against the
+    composed :func:`repro.dist.quantize.quantize_i8` + :func:`pack_bits`
+    path: the elementwise quantize math is identical, the block max and
+    the bit-plane integer sums are order-independent, and the zero
+    padding added here matches the composed padding exactly.
+
+    Deliberately NOT jit-wrapped so the single ``pallas_call`` shows up
+    plainly in callers' jaxprs (asserted in tests); padding/reshape is
+    pure layout the compiler folds into the kernel's operand windows.
+    ``eps`` is the caller's all-zero-block guard (quantize._EPS — passed
+    in because the kernel layer must not import the dist layer)."""
+    assert 1 <= width <= MAX_WIDTH, width
+    k = vals.shape[0]
+    assert k >= 1 and idx_lo.shape[0] == k, (vals.shape, idx_lo.shape)
+    W = word_count(k)
+    m = -(-k // scale_block)
+    v = vals.astype(jnp.float32)
+    vpad = m * scale_block - k
+    if vpad:
+        v = jnp.concatenate([v, jnp.zeros((vpad,), jnp.float32)])
+    x = idx_lo.astype(jnp.int32)
+    ipad = GROUP * W - k
+    if ipad:
+        x = jnp.concatenate([x, jnp.zeros((ipad,), jnp.int32)])
+    kern = functools.partial(_encode_fused_kernel, width=width, eps=eps)
+    words, q, scales = pl.pallas_call(
+        kern,
+        out_shape=(jax.ShapeDtypeStruct((width, W), jnp.int32),
+                   jax.ShapeDtypeStruct((m, scale_block), jnp.int8),
+                   jax.ShapeDtypeStruct((m, 1), jnp.float32)),
+        interpret=interpret,
+    )(v.reshape(m, scale_block), x.reshape(GROUP, W))
+    return words, q, scales[:, 0]
+
+
 def _pack_tail(x: jnp.ndarray, width: int) -> jnp.ndarray:
     """jnp mirror of :func:`_pack_kernel` for < LANE columns: ``x``
     (GROUP, Wt) int32 -> (width, Wt) planes, same shift/mask/weighted-sum

@@ -71,6 +71,13 @@ def parse_args(argv=None):
     p.add_argument("--lr", type=float, default=1e-3)
     p.add_argument("--data-shards", type=int, default=1)
     p.add_argument("--model-shards", type=int, default=1)
+    p.add_argument("--wire-buckets", type=int, default=1,
+                   help="split every bucketable ring exchange into this "
+                        "many pipeline buckets: bucket b's ppermute chain "
+                        "runs while bucket b+1 encodes (reduce-scatter / "
+                        "quantize / packed encode), overlapping "
+                        "compression compute with the wire.  1 = the "
+                        "historical unbucketed schedule, bit-for-bit")
     p.add_argument("--pod-shards", type=int, default=1,
                    help="prepend a pod axis of this size to the host "
                         "mesh: dp becomes (pod x data), which is the "
@@ -161,6 +168,7 @@ def main(argv=None):
                            ae_backend=args.ae_backend,
                            extract_backend=args.extract_backend,
                            topk_interpret=not args.topk_compiled,
+                           wire_buckets=args.wire_buckets,
                            guard=args.guard,
                            guard_checksum=args.guard_checksum,
                            fault_seed=args.fault_seed,
@@ -224,6 +232,7 @@ def main(argv=None):
         log.info("compression=%s CR(avg)=%.1fx bytes/node=%.0f",
                  cc.method, report.compression_ratio, report.bytes_per_node)
         fns = {}
+        fault_ops_by_phase = {}
         batch = first
         for _ in range(start_step):
             # the batch at step s is the s-th yield of the stream —
@@ -238,10 +247,15 @@ def main(argv=None):
                 # time, so reset before each phase build and report what
                 # one step of this phase moves per node
                 coll.reset_wire_tally()
+                chaos.reset_fault_tally()
                 fns[phase] = lts.make_step(phase, sds)
             params, opt_state, comp_state, metrics = fns[phase](
                 params, opt_state, comp_state, batch, step)
             if step == start_step or phase_for_step(step - 1, cc) != phase:
+                # the first call of a phase is the one that traces it:
+                # both tallies (wire bytes AND injected faults) fill in
+                # at trace time, so sample them here, not at build time
+                fault_ops_by_phase[phase] = chaos.fault_report()
                 wire = coll.wire_report()
                 if wire:
                     log.info("phase=%s wire bytes/node/step: %s", phase,
@@ -256,6 +270,12 @@ def main(argv=None):
                 rec = {"step": step, "phase": phase, "loss": loss}
                 if guard_on:
                     rec["faults"] = faults_total
+                if fault_ops_by_phase.get(phase):
+                    # per-op injected-fault counts ({op label: {fault
+                    # kind: count}}, static trace-time ints) ride along
+                    # next to the loss so a metrics consumer can
+                    # attribute a bad step to the op the spec targeted
+                    rec["fault_ops"] = fault_ops_by_phase[phase]
                 history.append(rec)
                 log.info("step %4d  phase=%-10s loss=%.4f", step, phase,
                          loss)

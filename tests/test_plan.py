@@ -289,10 +289,31 @@ def test_wire_terms_hier_two_axis_split(layout):
     assert set(flat["exempt_dense"]) == {"ring_allreduce"}
 
 
+def test_wire_terms_mesh_prices_lax_kinds(layout):
+    """mesh is a first-class pricing substrate now: each reduction costs
+    the lax ``all_reduce`` 2(K-1)/K ring-equivalent, each sparse
+    exchange the f32+int32 pair ``all_gather``, and the mesh never
+    buckets (the lax lowering is opaque — no schedule to pipeline)."""
+    plan = XP.build_plan(_cc("dgc", "ring"), layout, K)
+    terms = XP.wire_terms(plan, transport="mesh")
+    nd = sum(l.size for l in layout.dense)
+    want = {"all_reduce": 2 * (K - 1) / K * nd * 4,
+            "all_gather": (K - 1) * (layout.k_last + layout.mu_pad) * 8}
+    assert terms == pytest.approx(want)
+    # bucket-blind: a bucketed plan prices identically on mesh, with the
+    # ops' own labels (no #b<i> rows)
+    assert XP.wire_terms(plan, transport="mesh", wire_buckets=7) \
+        == pytest.approx(want)
+    by_op = XP.wire_terms_by_op(plan, transport="mesh", wire_buckets=7)
+    assert set(by_op) == {"exempt_dense", "exempt_last", "topk"}
+    # mesh moves exactly-sized lax buffers: zero padding overhead
+    assert XP.padding_overhead_terms(plan, transport="mesh") == {}
+
+
 def test_wire_ctx_rejects_bad_transport_and_axes(layout):
     plan = XP.build_plan(_cc("dgc", "ring"), layout, K)
     with pytest.raises(AssertionError):
-        XP.wire_terms(plan, transport="mesh")
+        XP.wire_terms(plan, transport="nvlink")
     with pytest.raises(AssertionError):
         XP.wire_terms(plan, axis_sizes=(2, 3))
 

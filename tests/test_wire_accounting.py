@@ -72,7 +72,8 @@ mesh = jax.make_mesh((K,), ("data",),
 
 for method in ["none", "sparse_gd", "dgc", "lgc_rar", "lgc_rar_q8",
                "lgc_ps"]:
-    for transport in ("ring", "ring_q8", "ring_hier", "ring_packed"):
+    for transport in ("mesh", "ring", "ring_q8", "ring_hier",
+                      "ring_packed"):
         cc = CompressionConfig(method=method, sparsity=0.05,
                                innovation_sparsity=0.005,
                                warmup_steps=1, ae_train_steps=2,
@@ -119,6 +120,10 @@ for method in ["none", "sparse_gd", "dgc", "lgc_rar", "lgc_rar_q8",
                 # the encoding reduction really moves int8 + scales
                 assert wire["ring_allreduce_q8"] == \
                     2 * (K - 1) * Q.wire_nbytes(chunk, Q.SCALE_BLOCK)
+            elif transport == "mesh":
+                # lax wire: full f32 all_reduce — fake quantization
+                # saves nothing on the opaque lowering either
+                assert wire["all_reduce"] >= 2 * (K - 1) / K * zl * 4
             else:
                 # float wire: the SAME reduction costs full f32 bytes —
                 # fake quantization saves nothing on the wire (the
@@ -376,10 +381,23 @@ def test_rate_report_packed_innovation_for_lgc_ps():
     assert r_packed.bytes_leader < r_f32.bytes_leader
 
 
-def test_wire_payload_terms_rejects_unmeasured_transports():
+def test_wire_payload_terms_mesh_and_rejections():
     cc, layout = _big_layout_cc("lgc_rar", "ring")
-    with pytest.raises(AssertionError):
-        wire_payload_terms(cc, layout, K, transport="mesh")
+    # mesh is priced now (lax tally kinds), no longer rejected: the
+    # dense reduce + the encoding reduce land in one all_reduce term,
+    # the sparse exchanges in all_gather, the leader index set in
+    # broadcast — exactly the kinds MeshTransport's collectives record
+    terms = wire_payload_terms(cc, layout, K, transport="mesh")
+    assert set(terms) == {"all_reduce", "all_gather", "broadcast"}
+    nd = sum(l.size for l in layout.dense)
+    zl = AE.compressed_length(layout.mu_pad)
+    assert terms["all_reduce"] == pytest.approx(
+        2 * (K - 1) / K * (nd + zl) * 4)
+    assert terms["all_gather"] == pytest.approx(
+        (K - 1) * layout.k_last * 8)
+    assert terms["broadcast"] == pytest.approx(
+        (K - 1) / K * layout.mu_pad * 4)
+    # a dp-mesh shape that doesn't multiply out to K is still rejected
     with pytest.raises(AssertionError):
         wire_payload_terms(cc, layout, K, axis_sizes=(2, 3))
 
